@@ -1,0 +1,55 @@
+"""Paper Figure 1: training-loss curves, MeZO vs Adam fine-tuning.
+
+RoBERTa-family reduced model on synthetic SST-2. The expected shape (and
+the paper's observation): both descend; Adam descends faster per step;
+MeZO descends "slightly but steadily".
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import MezoConfig
+from repro.data.synthetic import sst2_batches
+from repro.optim.adam import AdamConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def run(out_dir="experiments/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = get_config("roberta-large").reduced(n_layers=2, d_model=128,
+                                              d_ff=256, vocab=256)
+    steps = 200
+    curves = {}
+    rows = []
+    # MeZO hypers from a short stability sweep: higher lr diverges on the
+    # binary-CE head (lr=1e-2 blew up to loss 19.8); the paper's own
+    # observation is "decreases slightly but steadily", which this shows
+    for opt, oc in (("mezo", dict(mezo=MezoConfig(eps=1e-3, lr=2e-3,
+                                                  n_directions=8))),
+                    ("adam", dict(adam=AdamConfig(lr=1e-3)))):
+        tc = TrainerConfig(optimizer=opt, n_steps=steps, log_every=1000,
+                           **oc)
+        tr = Trainer(cfg, tc, sst2_batches(16, 32, cfg.vocab, seed=5))
+        t0 = time.perf_counter()
+        tr.train()
+        us = (time.perf_counter() - t0) / steps * 1e6
+        curves[opt] = tr.losses
+        d0, d1 = np.mean(tr.losses[:10]), np.mean(tr.losses[-10:])
+        rows.append((f"fig1/{opt}", us, f"loss {d0:.3f}->{d1:.3f}"))
+
+    with open(os.path.join(out_dir, "fig1_loss.json"), "w") as f:
+        json.dump(curves, f)
+    # the paper's qualitative claims, asserted
+    m0, m1 = np.mean(curves["mezo"][:20]), np.mean(curves["mezo"][-20:])
+    a0, a1 = np.mean(curves["adam"][:20]), np.mean(curves["adam"][-20:])
+    assert m1 < m0, "MeZO loss should decrease (Fig 1)"
+    assert a1 < a0, "Adam loss should decrease (Fig 1)"
+    rows.append(("fig1/adam_faster_per_step", 0.0,
+                 f"adam_drop={a0-a1:.3f};mezo_drop={m0-m1:.3f}"))
+    return rows

@@ -1,0 +1,63 @@
+"""Recompute roofline fields of dry-run JSONs from their saved .hlo.gz.
+
+The dry-run persists the SPMD-partitioned HLO next to each record, so
+analyzer improvements (loop-aware trip counting, carried-buffer HBM
+charging) can be re-applied offline without recompiling:
+
+  PYTHONPATH=src python -m benchmarks.reanalyze experiments/dryrun \
+      experiments/dryrun_baseline experiments/perf
+"""
+
+from __future__ import annotations
+
+import gzip
+import json
+import os
+import sys
+
+from repro.roofline.analysis import roofline_terms
+
+
+def reanalyze_dir(d: str) -> int:
+    n = 0
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        path = os.path.join(d, f)
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        hpath = path[:-5] + ".hlo.gz"
+        if not os.path.exists(hpath):
+            continue
+        hlo = gzip.open(hpath, "rt").read()
+        from repro.configs import get_config
+        try:
+            cfg = get_config(rec["arch"])
+        except KeyError:
+            cfg = None
+        import numpy as np
+        n_chips = int(np.prod(rec["mesh"]["shape"]))
+        mode = ("train" if rec.get("optimizer") in ("mezo", "mezo-parallel")
+                else ("train-adam" if rec.get("optimizer") == "adam"
+                      else rec["mode"]))
+        rec["roofline"] = roofline_terms(
+            rec.get("cost_analysis", {}), hlo, n_chips, cfg=cfg,
+            n_tokens=rec["n_tokens"], mode=mode)
+        from repro.roofline.hlo import collective_bytes
+        rec["collectives"] = collective_bytes(hlo)
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        n += 1
+    return n
+
+
+def main():
+    dirs = sys.argv[1:] or ["experiments/dryrun"]
+    for d in dirs:
+        if os.path.isdir(d):
+            print(f"[reanalyze] {d}: {reanalyze_dir(d)} records updated")
+
+
+if __name__ == "__main__":
+    main()

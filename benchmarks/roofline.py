@@ -1,0 +1,70 @@
+"""Aggregate dry-run artifacts into the roofline table (EXPERIMENTS.md).
+
+Reads experiments/dryrun/*.json and renders per-(arch x shape x mesh):
+three roofline terms, bottleneck, MODEL_FLOPS ratio, roofline fraction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+
+
+def load_records(dd="experiments/dryrun"):
+    recs = []
+    if not os.path.isdir(dd):
+        return recs
+    for f in sorted(os.listdir(dd)):
+        if f.endswith(".json"):
+            recs.append(json.load(open(os.path.join(dd, f))))
+    return recs
+
+
+def markdown_table(recs, mesh_tag="pod16x16"):
+    lines = [
+        "| arch | shape | opt | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "bottleneck | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh_tag") != mesh_tag:
+            continue
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                         f"SKIP: {r['reason'][:48]} | - | - |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                         f"FAIL | - | - |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('optimizer')} "
+            f"| {t['t_compute_s']:.3e} | {t['t_memory_s']:.3e} "
+            f"| {t['t_collective_s']:.3e} | {t['bottleneck']} "
+            f"| {t.get('useful_flops_ratio', 0):.3f} "
+            f"| {t.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(lines)
+
+
+def run(out_dir="experiments/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    recs = load_records()
+    rows = []
+    ok = [r for r in recs if r.get("status") == "ok"]
+    by_bottleneck = defaultdict(int)
+    for r in ok:
+        by_bottleneck[r["roofline"]["bottleneck"]] += 1
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh_tag']}",
+                     r["roofline"]["t_compute_s"] * 1e6,
+                     f"bottleneck={r['roofline']['bottleneck']};"
+                     f"frac={r['roofline'].get('roofline_fraction', 0):.4f}"))
+    for tag in ("pod16x16", "pod2x16x16"):
+        md = markdown_table(recs, tag)
+        with open(os.path.join(out_dir, f"roofline_{tag}.md"), "w") as f:
+            f.write(md + "\n")
+    rows.append(("roofline/summary", 0.0,
+                 ";".join(f"{k}={v}" for k, v in sorted(
+                     by_bottleneck.items()))))
+    return rows

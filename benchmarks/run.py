@@ -1,0 +1,45 @@
+"""Benchmark orchestrator -- one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement) and
+writes artifacts under experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1|table2|fig1|roofline]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import fig1_loss, roofline, table1_memory, table2_walltime
+    mods = {
+        "table1": table1_memory,
+        "table2": table2_walltime,
+        "fig1": fig1_loss,
+        "roofline": roofline,
+    }
+    if args.only:
+        mods = {args.only: mods[args.only]}
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in mods.items():
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},nan,ERROR")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Paper Table 1: memory for MeZO vs Adam fine-tuning, x batch size.
+
+Three measurements, mirroring the paper's phone-RSS numbers on this
+container/TPU target:
+
+  (a) live RSS around train steps on reduced RoBERTa, batch 8 vs 64
+      (the paper's exact axis: MeZO flat in batch, Adam grows),
+  (b) analytic state bytes at FULL RoBERTa-large / OPT-1.3B scale
+      (params/grads/moments/activations model),
+  (c) per-device compiled bytes from dry-run JSONs when present.
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import resource
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import MezoConfig, mezo_step
+from repro.data.synthetic import lm_batch_at, synthetic_lm_corpus
+from repro.models import build_model
+from repro.optim.adam import AdamConfig, adam_init, grad_train_step
+from repro.roofline.analysis import total_params
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _steps(cfg, optimizer: str, batch_size: int, n: int = 3) -> float:
+    """Peak RSS (MB) after n train steps at the given batch size."""
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = synthetic_lm_corpus(batch_size * 40 * 33, cfg.vocab, 0)
+    state = adam_init(params) if optimizer == "adam" else None
+    mcfg = MezoConfig(eps=1e-3, lr=1e-5)
+    for t in range(n):
+        batch = {k: jnp.asarray(v) for k, v in
+                 lm_batch_at(t, batch_size, 32, cfg.vocab, stream).items()}
+        if optimizer == "adam":
+            params, state, _ = grad_train_step(model.loss, params, batch,
+                                               state, AdamConfig())
+        else:
+            params, _ = mezo_step(model.loss, params, batch, jnp.uint32(t),
+                                  mcfg)
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    return _rss_mb()
+
+
+def analytic_state_gb(arch: str, batch: int, seq: int, optimizer: str):
+    """Full-scale state-memory model (the paper's mechanism, Sec 3.3)."""
+    cfg = get_config(arch)
+    n = total_params(cfg)
+    bp = 4 if cfg.dtype == "float32" else 2
+    act_per_layer = batch * seq * cfg.d_model * 4 * 6  # rough backprop saves
+    if optimizer == "mezo":
+        # params + ONE layer's transient activations (forward only)
+        return (n * bp + batch * seq * cfg.d_model * 4 * 2) / 1e9
+    # adam: params + grads + 2 fp32 moments + saved activations (all layers)
+    layers = cfg.n_layers if cfg.family != "encdec" else \
+        cfg.enc_layers + cfg.dec_layers
+    return (n * (bp + bp + 8) + act_per_layer * layers) / 1e9
+
+
+def run(out_dir="experiments/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    table = {}
+
+    # (a) live RSS on reduced roberta (paper's axis: batch 8 vs 64)
+    cfg = get_config("opt-1.3b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                         vocab=256)
+    for opt in ("mezo", "adam"):
+        for bs in (8, 64):
+            t0 = time.perf_counter()
+            rss = _steps(cfg, opt, bs)
+            us = (time.perf_counter() - t0) / 3 * 1e6
+            rows.append((f"table1/live_rss/{opt}/bs{bs}", us,
+                         f"rss_mb={rss:.0f}"))
+            table[f"live/{opt}/bs{bs}"] = rss
+
+    # (b) analytic full-scale numbers (paper: roberta 4GB, opt-1.3b 6.5GB)
+    for arch, bs in (("roberta-large", 8), ("roberta-large", 64),
+                     ("opt-1.3b", 8)):
+        for opt in ("mezo", "adam"):
+            gb = analytic_state_gb(arch, bs, 128 if "roberta" in arch
+                                   else 512, opt)
+            rows.append((f"table1/analytic/{arch}/{opt}/bs{bs}", 0.0,
+                         f"state_gb={gb:.2f}"))
+            table[f"analytic/{arch}/{opt}/bs{bs}"] = gb
+
+    # (c) compiled per-device bytes from dry-run artifacts, if present
+    dd = "experiments/dryrun"
+    if os.path.isdir(dd):
+        for f in sorted(os.listdir(dd)):
+            if "train_4k" not in f or not f.endswith(".json"):
+                continue
+            rec = json.load(open(os.path.join(dd, f)))
+            if rec.get("status") != "ok":
+                continue
+            ma = rec.get("memory_analysis", {})
+            arg = ma.get("argument_size_in_bytes")
+            tmp = ma.get("temp_size_in_bytes")
+            if arg is not None:
+                rows.append((f"table1/dryrun/{rec['arch']}/"
+                             f"{rec.get('optimizer')}", 0.0,
+                             f"arg_gb={arg/1e9:.2f};temp_gb={tmp/1e9:.2f}"))
+
+    with open(os.path.join(out_dir, "table1_memory.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    return rows

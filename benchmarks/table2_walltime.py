@@ -1,0 +1,93 @@
+"""Paper Table 2: per-step wall-clock for MeZO vs Adam, x batch size.
+
+The paper found near-parity on the phone (97s vs 74s at bs=8) because the
+SoC cannot exploit ZO's parallelism; we reproduce the same comparison on
+CPU (reduced model) and additionally benchmark K-direction vmap
+parallelism -- the effect the phone could not show (paper Sec 6.3).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import MezoConfig, mezo_step, mezo_step_vmapdir
+from repro.data.synthetic import lm_batch_at, synthetic_lm_corpus
+from repro.models import build_model
+from repro.optim.adam import AdamConfig, adam_init, grad_train_step
+
+
+def _time_steps(fn, n=5):
+    fn(0)  # compile
+    t0 = time.perf_counter()
+    for t in range(1, n + 1):
+        fn(t)
+    return (time.perf_counter() - t0) / n * 1e6  # us/step
+
+
+def run(out_dir="experiments/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = get_config("roberta-large").reduced(n_layers=2, d_model=128,
+                                              d_ff=256, vocab=256,
+                                              n_classes=0, family="dense",
+                                              pos="rope", norm="rmsnorm",
+                                              act="swiglu", causal=True)
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    stream = synthetic_lm_corpus(64 * 40 * 33, cfg.vocab, 0)
+    rows, table = [], {}
+
+    for bs in (8, 64):
+        def batch_at(t):
+            return {k: jnp.asarray(v) for k, v in
+                    lm_batch_at(t, bs, 32, cfg.vocab, stream).items()}
+
+        # mezo
+        p = jax.tree.map(jnp.copy, params0)
+        mcfg = MezoConfig(eps=1e-3, lr=1e-5)
+        state = {"p": p}
+
+        def mezo_fn(t):
+            state["p"], _ = mezo_step(model.loss, state["p"], batch_at(t),
+                                      jnp.uint32(t), mcfg)
+            jax.block_until_ready(jax.tree.leaves(state["p"])[0])
+        us = _time_steps(mezo_fn)
+        rows.append((f"table2/mezo/bs{bs}", us, ""))
+        table[f"mezo/bs{bs}"] = us
+
+        # adam
+        p = jax.tree.map(jnp.copy, params0)
+        astate = {"p": p, "s": adam_init(p)}
+
+        def adam_fn(t):
+            astate["p"], astate["s"], _ = grad_train_step(
+                model.loss, astate["p"], batch_at(t), astate["s"],
+                AdamConfig())
+            jax.block_until_ready(jax.tree.leaves(astate["p"])[0])
+        us = _time_steps(adam_fn)
+        rows.append((f"table2/adam/bs{bs}", us, ""))
+        table[f"adam/bs{bs}"] = us
+
+    # K-direction scaling (the parallelism the phone couldn't exploit)
+    for k in (1, 4):
+        p = jax.tree.map(jnp.copy, params0)
+        mcfg = MezoConfig(eps=1e-3, lr=1e-5, n_directions=k)
+        st = {"p": p}
+
+        def kfn(t):
+            st["p"], _ = mezo_step_vmapdir(model.loss, st["p"], batch_at(t),
+                                           jnp.uint32(t), mcfg)
+            jax.block_until_ready(jax.tree.leaves(st["p"])[0])
+        us = _time_steps(kfn, n=3)
+        rows.append((f"table2/mezo_vmapdir/K{k}", us,
+                     "directions evaluated concurrently"))
+        table[f"mezo_vmapdir/K{k}"] = us
+
+    with open(os.path.join(out_dir, "table2_walltime.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    return rows

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import load_params, save_params, latest_step
+from repro.checkpoint.replay_log import ReplayLog
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["load_params", "save_params", "latest_step", "ReplayLog",
+           "CheckpointManager"]

@@ -1,0 +1,10 @@
+"""gemma-2b [dense]: GeGLU, head_dim=256, MQA. [arXiv:2403.08295; hf]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b", family="dense", n_layers=18, d_model=2048,
+        n_heads=8, n_kv_heads=1, head_dim=256, d_ff=16384, vocab=256000,
+        act="geglu", norm="rmsnorm", pos="rope", tie_embeddings=True,
+        max_seq=32768)

@@ -1,0 +1,269 @@
+"""MeZO: memory-efficient zeroth-order fine-tuning (PocketLLM's method).
+
+Implements SPSA (Spall 1992) with MeZO's seed-replay storage trick
+(Malladi et al. 2024), as adopted by PocketLLM for on-device fine-tuning:
+
+    z ~ RNG(seed)          (regenerated, never stored)
+    l+ = L(theta + eps z);  l- = L(theta - eps z)
+    g  = (l+ - l-) / (2 eps)
+    theta <- theta - lr * g * z
+
+Two execution strategies:
+
+* ``mezo_step`` -- sequential over K directions with the *in-place walk*
+  (perturb / eval / counter-perturb / eval / restore-fused-with-update):
+  peak memory = params + one forward's activations. This is the
+  paper-faithful memory profile (PocketLLM Table 1).
+
+* ``mezo_step_vmapdir`` -- vmaps direction evaluation so a pod axis can
+  evaluate directions concurrently (PocketLLM Sec 6.3's "inherent
+  parallelization potential", realized). Costs one extra transient param
+  copy per device; cross-pod traffic is K scalars, not N gradients.
+
+Both return the new params plus a :class:`MezoAux` record whose
+``(seed, gs)`` pair is exactly what the replay-log checkpointer persists
+(~12 bytes/step/direction) -- see repro/checkpoint/replay_log.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as zrng
+from repro.core.perturb import add_scaled_z
+
+PyTree = Any
+LossFn = Callable[[PyTree, Any], jnp.ndarray]  # (params, batch) -> scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class MezoConfig:
+    eps: float = 1e-3
+    lr: float = 1e-6
+    n_directions: int = 1          # K: SPSA directions averaged per step
+    dist: str = "rademacher"       # or "gaussian" (MeZO-repo default)
+    use_kernel: bool = False       # route 2-D leaves via Pallas zo_add
+    momentum: float = 0.0          # ZO momentum via truncated seed replay
+    momentum_window: int = 8       # directions of history to replay
+    weight_decay: float = 0.0
+
+
+@dataclasses.dataclass
+class MezoAux:
+    loss: jnp.ndarray         # mean of (l+ + l-)/2 over directions
+    gs: jnp.ndarray           # (K,) projected gradients -- the replay log
+    seed: jnp.ndarray         # uint32 step seed -- the replay log
+    grad_norm_est: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    MezoAux,
+    lambda a: ((a.loss, a.gs, a.seed, a.grad_norm_est), None),
+    lambda _, c: MezoAux(*c),
+)
+
+
+def _apply_direction_updates(params, seed, gs, coeffs, cfg: MezoConfig):
+    """theta += sum_k coeffs[k] * gs[k] * z_k, z_k regenerated per k."""
+    k_tot = gs.shape[0]
+
+    def body(p, kg):
+        k, g, c = kg
+        return add_scaled_z(p, zrng.fold_seed(seed, k), c * g,
+                            dist=cfg.dist, use_kernel=cfg.use_kernel), None
+
+    params, _ = jax.lax.scan(
+        body, params, (jnp.arange(k_tot, dtype=jnp.uint32), gs, coeffs))
+    return params
+
+
+def _decay(params, wd_coeff):
+    if wd_coeff is None:
+        return params
+    return jax.tree.map(
+        lambda p: (p * (1.0 - wd_coeff)).astype(p.dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1,))
+def mezo_step(loss_fn: LossFn, params: PyTree, batch: Any, seed,
+              cfg: MezoConfig, direction_mask=None):
+    """Paper-faithful sequential MeZO step (in-place walk, donated params).
+
+    direction_mask: optional (K,) 0/1 floats -- straggler mitigation drops
+    late directions; the update renormalizes over survivors (an unbiased
+    lower-sample SPSA estimate, unique to ZO: no gradient shard is lost).
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    eps = jnp.float32(cfg.eps)
+    lr = jnp.float32(cfg.lr)
+    kk = cfg.n_directions
+
+    def one_dir(p, k):
+        s = zrng.fold_seed(seed, k)
+        p = add_scaled_z(p, s, eps, dist=cfg.dist, use_kernel=cfg.use_kernel)
+        lp = loss_fn(p, batch)
+        p = add_scaled_z(p, s, -2.0 * eps, dist=cfg.dist,
+                         use_kernel=cfg.use_kernel)
+        lm = loss_fn(p, batch)
+        # restore to base point for the next direction
+        p = add_scaled_z(p, s, eps, dist=cfg.dist, use_kernel=cfg.use_kernel)
+        g = (lp - lm) / (2.0 * eps)
+        return p, (g, 0.5 * (lp + lm))
+
+    params, (gs, ls) = jax.lax.scan(
+        one_dir, params, jnp.arange(kk, dtype=jnp.uint32))
+
+    coeffs = _direction_coeffs(kk, lr, direction_mask)
+    if cfg.weight_decay:
+        params = _decay(params, lr * cfg.weight_decay)
+    params = _apply_direction_updates(params, seed, gs, coeffs, cfg)
+    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
+                  grad_norm_est=jnp.abs(gs).mean())
+    return params, aux
+
+
+def _direction_coeffs(kk: int, lr, direction_mask):
+    if direction_mask is None:
+        return jnp.full((kk,), -lr / kk, jnp.float32)
+    m = jnp.asarray(direction_mask, jnp.float32).reshape(kk)
+    return -lr * m / jnp.maximum(m.sum(), 1.0)
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "cfg"))
+def mezo_step_vmapdir(loss_fn: LossFn, params: PyTree, batch: Any, seed,
+                      cfg: MezoConfig, direction_mask=None):
+    """Direction-parallel MeZO step.
+
+    The K-way vmap axis is what the launcher shards over the ``pod`` mesh
+    axis (see launch/train.py): each pod evaluates its directions on the
+    full (data-sharded) batch; the only cross-pod exchange is the (K,)
+    vector ``gs``.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    eps = jnp.float32(cfg.eps)
+    lr = jnp.float32(cfg.lr)
+    kk = cfg.n_directions
+
+    def eval_dir(k):
+        s = zrng.fold_seed(seed, k)
+        lp = loss_fn(add_scaled_z(params, s, eps, dist=cfg.dist), batch)
+        lm = loss_fn(add_scaled_z(params, s, -eps, dist=cfg.dist), batch)
+        return (lp - lm) / (2.0 * eps), 0.5 * (lp + lm)
+
+    gs, ls = jax.vmap(eval_dir)(jnp.arange(kk, dtype=jnp.uint32))
+
+    coeffs = _direction_coeffs(kk, lr, direction_mask)
+    if cfg.weight_decay:
+        params = _decay(params, lr * cfg.weight_decay)
+    params = _apply_direction_updates(params, seed, gs, coeffs, cfg)
+    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
+                  grad_norm_est=jnp.abs(gs).mean())
+    return params, aux
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1,))
+def mezo_momentum_step(loss_fn: LossFn, params: PyTree, batch: Any, seed,
+                       cfg: MezoConfig, hist):
+    """ZO-momentum via truncated seed replay (paper Sec 6.2 asks for
+    faster derivative-free methods).
+
+    Classical momentum needs a param-sized velocity buffer -- exactly the
+    memory MeZO exists to avoid. But the ZO velocity is structurally
+      v_t = sum_i beta^{t-i} g_i z_i,
+    so a truncated window of M (seed, g) PAIRS represents it in O(M)
+    scalars; the update replays the last M directions with geometric
+    weights. Memory: M*(K+1) scalars. Compute: M extra z-regeneration
+    sweeps per step (bandwidth-bound, no forwards).
+
+    hist: {"seeds": (M,) uint32, "gs": (M, K) f32} (zeros = empty slots;
+    g=0 entries are no-ops). Returns (params, aux, new_hist).
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    eps = jnp.float32(cfg.eps)
+    lr = jnp.float32(cfg.lr)
+    kk = cfg.n_directions
+    beta = jnp.float32(cfg.momentum)
+    m = cfg.momentum_window
+
+    def eval_dir(k):
+        s = zrng.fold_seed(seed, k)
+        lp = loss_fn(add_scaled_z(params, s, eps, dist=cfg.dist), batch)
+        lm = loss_fn(add_scaled_z(params, s, -eps, dist=cfg.dist), batch)
+        return (lp - lm) / (2.0 * eps), 0.5 * (lp + lm)
+
+    gs, ls = jax.vmap(eval_dir)(jnp.arange(kk, dtype=jnp.uint32))
+
+    # roll the window: newest last
+    seeds_h = jnp.concatenate([hist["seeds"][1:], seed[None]])
+    gs_h = jnp.concatenate([hist["gs"][1:], gs[None]])
+
+    # apply sum_j beta^(M-1-j) * (-lr/K) * g_jk * z(seed_j, k)
+    ages = jnp.arange(m - 1, -1, -1, dtype=jnp.float32)
+    weights = (1.0 - beta) * beta ** ages if cfg.momentum else         jnp.where(ages == 0, 1.0, 0.0)
+
+    def body(p, inp):
+        s_j, g_j, w_j = inp
+
+        def dir_body(pp, kg):
+            k, g = kg
+            return add_scaled_z(pp, zrng.fold_seed(s_j, k),
+                                -lr * w_j * g / kk, dist=cfg.dist), None
+        p, _ = jax.lax.scan(
+            dir_body, p, (jnp.arange(kk, dtype=jnp.uint32), g_j))
+        return p, None
+
+    if cfg.weight_decay:
+        params = _decay(params, lr * cfg.weight_decay)
+    params, _ = jax.lax.scan(body, params, (seeds_h, gs_h, weights))
+    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
+                  grad_norm_est=jnp.abs(gs).mean())
+    return params, aux, {"seeds": seeds_h, "gs": gs_h}
+
+
+def momentum_history_init(cfg: MezoConfig):
+    return {"seeds": jnp.zeros((cfg.momentum_window,), jnp.uint32),
+            "gs": jnp.zeros((cfg.momentum_window, cfg.n_directions),
+                            jnp.float32)}
+
+
+def replay_update(params: PyTree, seed, gs, cfg: MezoConfig):
+    """Re-apply a logged step's update from its (seed, gs) record.
+
+    This is the recovery path of the replay-log checkpointer: a crashed
+    worker reconstructs theta_t from theta_0 and the scalar log at memory
+    bandwidth, with zero forward passes.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    gs = jnp.asarray(gs, jnp.float32).reshape(-1)
+    # identical f32 arithmetic to the live step -> bit-exact replay
+    coeffs = _direction_coeffs(gs.shape[0], jnp.float32(cfg.lr), None)
+    if cfg.weight_decay:
+        params = _decay(params, cfg.lr * cfg.weight_decay)
+    return _apply_direction_updates(params, seed, gs, coeffs, cfg)
+
+
+def spsa_gradient_estimate(loss_fn: LossFn, params: PyTree, batch: Any,
+                           seed, cfg: MezoConfig) -> PyTree:
+    """Materialized SPSA gradient estimate: mean_k g_k * z_k.
+
+    Only for tests / analysis -- production paths never materialize z.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    eps = jnp.float32(cfg.eps)
+
+    def est(k):
+        s = zrng.fold_seed(seed, k)
+        lp = loss_fn(add_scaled_z(params, s, eps, dist=cfg.dist), batch)
+        lm = loss_fn(add_scaled_z(params, s, -eps, dist=cfg.dist), batch)
+        g = (lp - lm) / (2.0 * eps)
+        zero = jax.tree.map(jnp.zeros_like, params)
+        return add_scaled_z(zero, s, g, dist=cfg.dist)
+
+    grads = [est(jnp.uint32(k)) for k in range(cfg.n_directions)]
+    return jax.tree.map(lambda *xs: sum(xs) / len(xs), *grads)

@@ -1,0 +1,87 @@
+"""Seed-replay pytree perturbation: theta <- theta + c * z(seed).
+
+The perturbation z is regenerated from (seed, leaf-path) on every call and
+is never stored across calls -- the live footprint is one transient
+leaf-sized buffer at a time, which XLA fuses into the add. This is the
+functional-JAX rendering of MeZO's in-place ``torch.normal_``-replay trick
+(PocketLLM Sec. 3.3).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as zrng
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def leaf_salts(params: PyTree) -> PyTree:
+    """Static per-leaf salts (python ints), same structure as params."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    salts = [zrng.leaf_salt(_path_str(path)) for path, _ in leaves]
+    return jax.tree_util.tree_unflatten(treedef, salts)
+
+
+def is_perturbable(path_str: str) -> bool:
+    """Which leaves receive ZO noise. Everything trainable by default."""
+    return True
+
+
+def add_scaled_z(params: PyTree, seed, coeff, dist: str = "rademacher",
+                 use_kernel: bool = False) -> PyTree:
+    """theta + coeff * z(seed), leaf-wise, z regenerated (never stored).
+
+    ``coeff`` may be a traced scalar (e.g. ``eps - lr * g`` fusing the
+    restore and update passes of MeZO into a single sweep).
+
+    use_kernel: route large 2-D leaves through the Pallas fused kernel
+    (repro.kernels.ops.zo_add) instead of jnp; identical values by
+    construction of the hash RNG.
+    """
+    coeff = jnp.asarray(coeff, jnp.float32)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in leaves:
+        ps = _path_str(path)
+        if not is_perturbable(ps) or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(leaf)
+            continue
+        salt = zrng.leaf_salt(ps)
+        if use_kernel and leaf.ndim == 2 and leaf.shape[0] % 8 == 0 and leaf.shape[1] % 128 == 0:
+            from repro.kernels import ops as kops  # lazy: pallas import
+            out.append(kops.zo_add(leaf, seed, salt, coeff, dist=dist))
+        else:
+            z = zrng.z_field(seed, salt, leaf.shape, jnp.float32, dist)
+            out.append((leaf.astype(jnp.float32) + coeff * z).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in out])
+
+
+def dot_with_z(params_like: PyTree, seed, tangent: PyTree,
+               dist: str = "rademacher"):
+    """<tangent, z(seed)> -- used by tests to cross-check the estimator."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params_like)
+    tleaves = jax.tree_util.tree_leaves(tangent)
+    acc = jnp.float32(0.0)
+    for (path, leaf), t in zip(leaves, tleaves):
+        ps = _path_str(path)
+        if not is_perturbable(ps) or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        z = zrng.z_field(seed, zrng.leaf_salt(ps), leaf.shape, jnp.float32, dist)
+        acc = acc + jnp.vdot(t.astype(jnp.float32), z)
+    return acc

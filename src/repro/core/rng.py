@@ -1,0 +1,109 @@
+"""Counter-based hash RNG for seed-replay perturbations.
+
+PocketLLM / MeZO's memory trick is that the perturbation ``z`` is *never
+stored* -- it is regenerated from a PRNG seed at every use (perturb,
+un-perturb, update). On TPU we additionally want to regenerate ``z`` tiles
+*inside* a Pallas kernel so that ``z`` never touches HBM. That requires a
+counter-based (stateless, coordinate-addressable) RNG whose output for
+element ``(i0, i1, ...)`` of a leaf depends only on ``(seed, leaf_id,
+coords)`` -- identical whether evaluated by the pure-jnp reference, the
+fused kernel, or the update path.
+
+We use an xxhash/murmur-style integer avalanche over per-dimension iotas.
+This is NOT a cryptographic RNG; it only needs to be a good-enough source
+of i.i.d. signs/gaussians for SPSA (Spall 1992), which is robust to mild
+RNG imperfection. All arithmetic is uint32 with wraparound semantics.
+"""
+
+from __future__ import annotations
+
+import zlib
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Distinct odd multipliers per dimension (first 8 dims supported; models
+# here never exceed 5-D leaves). Values are standard hash-mixing primes.
+_DIM_PRIMES = (
+    0x9E3779B1,  # golden-ratio prime
+    0x85EBCA77,
+    0xC2B2AE3D,
+    0x27D4EB2F,
+    0x165667B1,
+    0xD3A2646D,
+    0xFD7046C5,
+    0xB55A4F09,
+)
+
+_U32 = jnp.uint32
+
+
+def avalanche(x):
+    """Final xxhash32-style avalanche: full-period bijection on uint32."""
+    x = x.astype(_U32) if hasattr(x, "astype") else jnp.asarray(x, _U32)
+    x = x ^ (x >> 15)
+    x = x * _U32(0x2C1B3C6D)
+    x = x ^ (x >> 12)
+    x = x * _U32(0x297A2D39)
+    x = x ^ (x >> 15)
+    return x
+
+
+def leaf_salt(path: str) -> int:
+    """Stable per-leaf salt from the pytree path (python int, trace-time)."""
+    return zlib.crc32(path.encode("utf-8")) & 0xFFFFFFFF
+
+
+def fold_seed(seed, k):
+    """Derive a sub-seed (e.g. per perturbation direction k). Traced-safe."""
+    s = jnp.asarray(seed, _U32)
+    return avalanche(s ^ (jnp.asarray(k, _U32) * _U32(_DIM_PRIMES[1])))
+
+
+def _coord_hash(seed, salt: int, shape, offsets=None):
+    """uint32 hash field over an index grid of ``shape``.
+
+    offsets: optional per-dim start indices (used by Pallas tiles so a tile
+    at block (i, j) reproduces the same values as the full-array reference).
+    """
+    if len(shape) > len(_DIM_PRIMES):
+        raise ValueError(f"leaf rank {len(shape)} > {len(_DIM_PRIMES)} unsupported")
+    h = avalanche(jnp.asarray(seed, _U32) ^ _U32(salt))
+    if len(shape) == 0:
+        return avalanche(h)
+    for d, n in enumerate(shape):
+        iota = jax.lax.broadcasted_iota(_U32, shape, d)
+        if offsets is not None:
+            iota = iota + jnp.asarray(offsets[d], _U32)
+        h = avalanche(h ^ (iota * _U32(_DIM_PRIMES[d % len(_DIM_PRIMES)])))
+    return h
+
+
+def rademacher_field(seed, salt: int, shape, dtype=jnp.float32, offsets=None):
+    """±1 field, one hash per element (default ZO perturbation)."""
+    bits = _coord_hash(seed, salt, shape, offsets)
+    sign = 1.0 - 2.0 * (bits >> 31).astype(jnp.float32)
+    return sign.astype(dtype)
+
+
+def gaussian_field(seed, salt: int, shape, dtype=jnp.float32, offsets=None):
+    """N(0,1) field via Box-Muller on two decorrelated hash fields."""
+    h1 = _coord_hash(seed, salt, shape, offsets)
+    h2 = avalanche(h1 ^ _U32(0x68E31DA4))
+    # uniforms in (0, 1]: use top 24 bits, add 1 ulp to avoid log(0)
+    u1 = ((h1 >> 8).astype(jnp.float32) + 1.0) * (1.0 / 16777216.0)
+    u2 = (h2 >> 8).astype(jnp.float32) * (1.0 / 16777216.0)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = (2.0 * np.pi) * u2
+    return (r * jnp.cos(theta)).astype(dtype)
+
+
+def z_field(seed, salt: int, shape, dtype=jnp.float32, dist: str = "rademacher",
+            offsets=None):
+    if dist == "rademacher":
+        return rademacher_field(seed, salt, shape, dtype, offsets)
+    if dist == "gaussian":
+        return gaussian_field(seed, salt, shape, dtype, offsets)
+    raise ValueError(f"unknown zo distribution: {dist}")

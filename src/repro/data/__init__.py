@@ -1,0 +1,6 @@
+from repro.data.synthetic import (lm_batches, sst2_batches,
+                                  synthetic_lm_corpus, synthetic_sst2)
+from repro.data.pipeline import DataPipeline
+
+__all__ = ["lm_batches", "sst2_batches", "synthetic_lm_corpus",
+           "synthetic_sst2", "DataPipeline"]

@@ -1,0 +1,63 @@
+"""Host-side data pipeline: background prefetch + sharded device_put.
+
+At multi-host scale each process feeds only its addressable shard of the
+global batch; ``jax.make_array_from_process_local_data`` handles the
+host->device scatter. On single-process meshes ``jax.device_put`` with a
+NamedSharding does the same thing.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class DataPipeline:
+    def __init__(self, source: Iterator[Any], sharding=None,
+                 prefetch: int = 2):
+        self._source = source
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._sharding is None:
+            return batch
+        return jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s), batch,
+            self._sharding)
+
+    def _worker(self):
+        try:
+            for batch in self._source:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._place(batch))
+        except Exception as e:  # surface errors on the consumer side
+            self._q.put(e)
+        self._q.put(StopIteration())
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, StopIteration):
+            raise item
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the ZO hot spots (validated in interpret mode).
+
+zo_add    : W + c*z(seed)        -- perturb / fused restore+update sweep
+zo_matmul : X @ (W + c*z(seed))  -- perturbed forward matmul, z never in HBM
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import zo_add, zo_matmul
+
+__all__ = ["ops", "ref", "zo_add", "zo_matmul"]

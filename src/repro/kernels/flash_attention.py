@@ -1,0 +1,115 @@
+"""Forward-only flash attention (Pallas TPU), GQA + causal.
+
+ZO fine-tuning needs no backward pass, so the *inference* kernel is the
+training kernel -- no stored softmax statistics, no recompute policy.
+Online-softmax over K/V tiles keeps the (bq, bk) score tile in VMEM; the
+(S, T) score matrix never exists in HBM. For qwen3-4b train_4k the
+XLA-fallback chunked attention writes+reads ~1.2 TB/chip/step of f32
+scores (the dominant HBM term, EXPERIMENTS.md Sec Perf); with this kernel
+that traffic is exactly zero.
+
+Layout: q (B, S, KV, G, hd); k/v (B, T, KV, hd). Grid (B*KV*G, nq, nk),
+k-tiles innermost, accumulators (acc, m, l) in VMEM scratch across the
+k-loop. Causal tiles fully above the diagonal are masked out (the
+pl.when guard skips their dot on TPU; interpret mode computes and masks).
+
+Block sizes default to (128, 128) -- MXU-aligned for hd in {64,112,128,
+256} via full-head-dim tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq, bk, n_k, causal, scale):
+    kk = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    live = (not causal) or (qi * bq + bq - 1 >= kk * bk)
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, :, 0, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kk == n_k - 1)
+    def _():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blocks",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, blocks=(128, 128),
+                    interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd) -> (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+
+    def pick(dim, want):
+        bb = min(want, dim)
+        while dim % bb:
+            bb -= 1
+        return bb
+
+    bq, bk = pick(s, blocks[0]), pick(t, blocks[1])
+    grid = (b * kvh * g, s // bq, t // bk)
+
+    def qmap(p, qi, kk):
+        return (p // (kvh * g), qi, (p // g) % kvh, p % g, 0)
+
+    def kmap(p, qi, kk):
+        return (p // (kvh * g), kk, (p // g) % kvh, 0)
+
+    kern = functools.partial(_flash_kernel, bq=bq, bk=bk, n_k=grid[2],
+                             causal=causal,
+                             scale=1.0 / float(hd) ** 0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, 1, hd), qmap),
+            pl.BlockSpec((1, bk, 1, hd), kmap),
+            pl.BlockSpec((1, bk, 1, hd), kmap),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, 1, hd), qmap),
+        out_shape=jax.ShapeDtypeStruct((b, s, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,26 @@
+"""jit'd wrappers around the ZO Pallas kernels.
+
+On non-TPU backends (this container) the kernels run in interpret mode,
+which executes the kernel body in Python for correctness validation; on
+TPU they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import zo_perturb as _k
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
+           block=(256, 256)):
+    return _k.zo_add(w, seed, salt, coeff, dist=dist, block=block,
+                     interpret=_INTERPRET)
+
+
+def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
+              blocks=(128, 128, 128)):
+    return _k.zo_matmul(x, w, seed, salt, coeff, dist=dist, blocks=blocks,
+                        interpret=_INTERPRET)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the ZO Pallas kernels.
+
+These share the hash RNG with repro.core.rng (same avalanche, same
+per-dimension primes), so kernel-vs-ref comparisons are bit-exact in f32
+for rademacher and allclose for gaussian/matmul accumulation order.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rng as zrng
+
+
+def z_ref(seed, salt: int, shape, dist: str = "rademacher"):
+    return zrng.z_field(seed, salt, shape, jnp.float32, dist)
+
+
+def zo_add_ref(w, seed, salt: int, coeff, dist: str = "rademacher"):
+    z = z_ref(seed, salt, w.shape, dist)
+    return (w.astype(jnp.float32) + jnp.float32(coeff) * z).astype(w.dtype)
+
+
+def zo_matmul_ref(x, w, seed, salt: int, coeff, dist: str = "rademacher"):
+    z = z_ref(seed, salt, w.shape, dist)
+    wp = w.astype(jnp.float32) + jnp.float32(coeff) * z
+    return (x.astype(jnp.float32) @ wp).astype(x.dtype)

@@ -1,0 +1,161 @@
+"""Pallas TPU kernels for zeroth-order perturbation (the paper's hot spot).
+
+PocketLLM's memory claim rests on never materializing the perturbation
+``z``. On a phone that means regenerating from a CPU PRNG into registers;
+the TPU-native rendering is to regenerate ``z`` *tiles in VMEM* inside the
+kernel so z never exists in HBM at all:
+
+  * ``zo_add_kernel``     -- W' = W + coeff * z(seed)   (perturb / fused
+                             restore+update sweep of a MeZO step)
+  * ``zo_matmul_kernel``  -- Y  = X @ (W + coeff * z(seed))  (perturbed
+                             forward matmul: the perturbation is fused
+                             into the MXU pipeline; W is read once and z
+                             costs zero HBM bytes)
+
+The RNG is the same counter-based avalanche hash as repro.core.rng, keyed
+by absolute (row, col) coordinates, so full-array references in ref.py
+reproduce kernel tiles bit-exactly for any BlockSpec tiling.
+
+Block shapes: (128, 128)-aligned tiles for the MXU; zo_add is a pure
+VPU/memory kernel and uses (256, 256) tiles to amortize grid overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_U32 = jnp.uint32
+
+# keep in sync with repro.core.rng (duplicated to keep the kernel module
+# importable without touching jax device state through core's __init__)
+_DIM_PRIMES = (0x9E3779B1, 0x85EBCA77)
+
+
+def _avalanche(x):
+    x = x ^ (x >> 15)
+    x = x * _U32(0x2C1B3C6D)
+    x = x ^ (x >> 12)
+    x = x * _U32(0x297A2D39)
+    x = x ^ (x >> 15)
+    return x
+
+
+def _tile_z(seed, salt, shape, row0, col0, dist: str):
+    """z tile of ``shape`` at absolute offset (row0, col0), f32."""
+    h = _avalanche(jnp.asarray(seed, _U32) ^ _U32(salt))
+    ri = jax.lax.broadcasted_iota(_U32, shape, 0) + jnp.asarray(row0, _U32)
+    ci = jax.lax.broadcasted_iota(_U32, shape, 1) + jnp.asarray(col0, _U32)
+    h = _avalanche(h ^ (ri * _U32(_DIM_PRIMES[0])))
+    h = _avalanche(h ^ (ci * _U32(_DIM_PRIMES[1])))
+    if dist == "rademacher":
+        return 1.0 - 2.0 * (h >> 31).astype(jnp.float32)
+    # gaussian (Box-Muller)
+    h2 = _avalanche(h ^ _U32(0x68E31DA4))
+    u1 = ((h >> 8).astype(jnp.float32) + 1.0) * (1.0 / 16777216.0)
+    u2 = (h2 >> 8).astype(jnp.float32) * (1.0 / 16777216.0)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(6.283185307179586 * u2)
+
+
+# ---------------------------------------------------------------------------
+# W + coeff * z
+
+
+def _pick(dim: int, want: int) -> int:
+    """Largest block size <= want that divides dim (prefers lane-aligned)."""
+    b = min(want, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _zo_add_kernel(seed_ref, coeff_ref, w_ref, o_ref, *, salt, bm, bn, dist):
+    i, j = pl.program_id(0), pl.program_id(1)
+    z = _tile_z(seed_ref[0], salt, (bm, bn), i * bm, j * bn, dist)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = (w + coeff_ref[0] * z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("salt", "dist", "block", "interpret"))
+def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
+           block=(256, 256), interpret: bool = False):
+    """W + coeff*z for a 2-D leaf; z regenerated in VMEM, never in HBM."""
+    m, n = w.shape
+    bm, bn = _pick(m, block[0]), _pick(n, block[1])
+    grid = (m // bm, n // bn)
+    seed = jnp.asarray(seed, _U32).reshape(1)
+    coeff = jnp.asarray(coeff, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_zo_add_kernel, salt=salt, bm=bm, bn=bn, dist=dist),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seed
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # coeff
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(seed, coeff, w)
+
+
+# ---------------------------------------------------------------------------
+# X @ (W + coeff * z)
+
+
+def _zo_matmul_kernel(seed_ref, coeff_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                      salt, bk, bn, n_k, dist):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = pl.program_id(1)
+    z = _tile_z(seed_ref[0], salt, (bk, bn), k * bk, j * bn, dist)
+    w = w_ref[...].astype(jnp.float32) + coeff_ref[0] * z
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("salt", "dist", "blocks", "interpret"))
+def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
+              blocks=(128, 128, 128), interpret: bool = False):
+    """Y = X @ (W + coeff * z(seed)). X: (M, K), W: (K, N).
+
+    The perturbed weight tile lives only in VMEM: HBM traffic is exactly
+    the unperturbed matmul's (X, W read once; Y written once).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bk, bn = _pick(m, blocks[0]), _pick(k, blocks[1]), _pick(n, blocks[2])
+    grid = (m // bm, n // bn, k // bk)
+    seed = jnp.asarray(seed, _U32).reshape(1)
+    coeff = jnp.asarray(coeff, jnp.float32).reshape(1)
+    kern = functools.partial(_zo_matmul_kernel, salt=salt, bk=bk, bn=bn,
+                             n_k=grid[2], dist=dist)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(seed, coeff, x, w)

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape) cell on the
+production mesh, with 512 placeholder host devices standing in for the
+2-pod v5e slice. Proves the distribution config is coherent: sharding
+mismatches, compile-time OOMs and unsupported collectives all fail here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      [--optimizer mezo|mezo-parallel|adam] [--out experiments/dryrun]
+
+Outputs one JSON per cell: memory_analysis, cost_analysis, collective
+bytes (parsed from the partitioned HLO), analytic per-device bytes, and
+the three roofline terms.
+"""  # noqa: E402
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.mezo import MezoConfig, mezo_step, mezo_step_vmapdir
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as shd
+from repro.optim.adam import AdamConfig, adam_init, grad_train_step
+from repro.roofline.analysis import (active_params, roofline_terms,
+                                     total_params)
+
+
+def _analytic_bytes_per_device(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shard = leaf.sharding.shard_shape(leaf.shape) \
+            if getattr(leaf, "sharding", None) else leaf.shape
+        total += int(np.prod(shard)) * leaf.dtype.itemsize
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, mesh, optimizer: str = "mezo",
+               mezo_cfg: MezoConfig = None, cfg_overrides=None):
+    """Returns (lowered, meta). Raises on unsupported cells."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    inp = S.cell_inputs(cfg, shape_name, mesh)
+    model = inp["model"]
+    mcfg = mezo_cfg or MezoConfig(n_directions=1)
+    meta = dict(arch=arch, shape=shape_name, mode=inp["mode"],
+                optimizer=optimizer if inp["mode"] == "train" else "fwd",
+                mesh=dict(axes=list(mesh.axis_names),
+                          shape=[int(s) for s in mesh.devices.shape]))
+    sh = S.SHAPES[shape_name]
+    meta["n_tokens"] = sh["batch"] * (sh["seq"] if inp["mode"] != "decode"
+                                      else 1)
+    meta["analytic_param_bytes_per_device"] = _analytic_bytes_per_device(
+        inp["params"])
+
+    if inp["mode"] == "train":
+        if optimizer == "adam":
+            state = jax.eval_shape(adam_init, inp["params"])
+            state = S._with_shardings(
+                state, shd.spec_tree(state, fsdp=cfg.fsdp_params), mesh)
+            meta["analytic_opt_bytes_per_device"] = \
+                _analytic_bytes_per_device(state)
+            lowered = grad_train_step.lower(model.loss, inp["params"],
+                                            inp["batch"], state,
+                                            AdamConfig())
+        else:
+            step = {"mezo": mezo_step, "mezo-parallel": mezo_step_vmapdir}
+            lowered = step[optimizer].lower(model.loss, inp["params"],
+                                            inp["batch"], inp["seed"], mcfg,
+                                            None)
+            meta["analytic_opt_bytes_per_device"] = 0
+    elif inp["mode"] == "prefill":
+        fn = jax.jit(lambda p, b: model.forward(p, b, last_only=True))
+        lowered = fn.lower(inp["params"], inp["batch"])
+    else:  # decode
+        meta["analytic_cache_bytes_per_device"] = _analytic_bytes_per_device(
+            inp["cache"])
+        fn = jax.jit(model.decode_step, donate_argnums=(1,))
+        lowered = fn.lower(inp["params"], inp["cache"], inp["tokens"],
+                           inp["pos"])
+    return lowered, meta, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             optimizer: str = "mezo", out_dir: str = None,
+             verbose: bool = True, cfg_overrides=None, tag: str = None):
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    if tag:
+        mesh_tag = f"{mesh_tag}+{tag}"
+    cfg = get_config(arch)
+    reason = S.cell_supported(cfg, shape_name)
+    rec = dict(arch=arch, shape=shape_name, mesh_tag=mesh_tag,
+               optimizer=optimizer)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        _emit(rec, out_dir, verbose)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            lowered, meta, cfg = lower_cell(arch, shape_name, mesh,
+                                            optimizer,
+                                            cfg_overrides=cfg_overrides)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        _emit(rec, out_dir, verbose)
+        return rec
+
+    rec.update(meta)
+    rec.update(status="ok", t_lower_s=round(t_lower, 1),
+               t_compile_s=round(t_compile, 1))
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in dir(ma)
+            if k.endswith("size_in_bytes") and not k.startswith("_")}
+    except Exception as e:
+        rec["memory_analysis"] = {"unavailable": str(e)[:200]}
+
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "optimal_seconds")}
+    except Exception as e:
+        cost = {}
+        rec["cost_analysis"] = {"unavailable": str(e)[:200]}
+
+    hlo = None
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        try:
+            hlo = lowered.as_text()
+        except Exception:
+            pass
+
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec["n_params_total"] = float(total_params(cfg))
+    rec["n_params_active"] = float(active_params(cfg))
+    rec["roofline"] = roofline_terms(
+        cost if isinstance(cost, dict) else {}, hlo, n_chips, cfg=cfg,
+        n_tokens=rec["n_tokens"],
+        mode=("train" if rec.get("optimizer") in ("mezo", "mezo-parallel")
+              else ("train-adam" if rec.get("optimizer") == "adam"
+                    else rec["mode"])))
+    if hlo:
+        from repro.roofline.hlo import collective_bytes
+        rec["collectives"] = collective_bytes(hlo)
+        if out_dir:  # persist HLO for offline (re-)analysis / perf work
+            import gzip
+            os.makedirs(out_dir, exist_ok=True)
+            hname = (f"{rec['arch']}__{rec['shape']}__{rec['mesh_tag']}"
+                     f"__{rec.get('optimizer', 'na')}.hlo.gz")
+            with gzip.open(os.path.join(out_dir, hname), "wt") as f:
+                f.write(hlo)
+    _emit(rec, out_dir, verbose)
+    return rec
+
+
+def _emit(rec, out_dir, verbose):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh_tag']}"
+                f"__{rec.get('optimizer','na')}.json")
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"[dryrun] OK  {rec['arch']:24s} {rec['shape']:12s} "
+                  f"{rec['mesh_tag']:10s} bottleneck={r['bottleneck']:10s} "
+                  f"tc={r['t_compute_s']:.3e} tm={r['t_memory_s']:.3e} "
+                  f"tx={r['t_collective_s']:.3e}")
+        elif rec["status"] == "skip":
+            print(f"[dryrun] SKIP {rec['arch']:24s} {rec['shape']:12s} "
+                  f"({rec['reason'][:60]})")
+        else:
+            print(f"[dryrun] FAIL {rec['arch']:24s} {rec['shape']:12s} "
+                  f"{rec['error'][:200]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(S.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimizer", default="mezo",
+                    choices=["mezo", "mezo-parallel", "adam"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="shard_map expert parallelism (perf opt)")
+    ap.add_argument("--tag", default=None,
+                    help="suffix for output filenames (perf iterations)")
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                ovr = {"moe_ep": True} if args.moe_ep else None
+                rec = run_cell(arch, shape, mp, args.optimizer, args.out,
+                               cfg_overrides=ovr, tag=args.tag)
+                n_fail += rec["status"] == "fail"
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh builders. TPU v5e: one pod = 16 x 16 = 256 chips.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init --
+the dry-run sets XLA_FLAGS before importing anything).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    from jax.sharding import AxisType
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+# v5e hardware constants used by the roofline analysis (per assignment)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+No device allocation: params/batch/cache are shape-only stand-ins with
+NamedShardings attached, feeding ``jax.jit(...).lower(...)`` directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import build_model, sharding as shd
+from repro.models.config import ModelConfig
+
+# The assigned input-shape set (LM family: seq_len x global_batch).
+SHAPES: Dict[str, dict] = {
+    "train_4k":    dict(mode="train",   seq=4096,   batch=256),
+    "prefill_32k": dict(mode="prefill", seq=32768,  batch=32),
+    "decode_32k":  dict(mode="decode",  seq=32768,  batch=128),
+    "long_500k":   dict(mode="decode",  seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if supported, else a skip reason (recorded in EXPERIMENTS.md)."""
+    if shape_name == "long_500k" and not cfg.is_sub_quadratic:
+        return ("pure full-attention arch: 524k decode requires "
+                "sub-quadratic attention (skip per assignment)")
+    if SHAPES[shape_name]["mode"] == "decode" and cfg.family == "encoder":
+        return "encoder-only arch has no decode step"
+    return None
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _data_axes(mesh, cfg=None):
+    axes = ["pod", "data"]
+    if cfg is not None and not cfg.use_tp:
+        axes.append("model")     # no TP: the model axis joins DP
+    return [a for a in axes if a in mesh.axis_names]
+
+
+def _with_shardings(tree, spec_tree_, mesh):
+    spec_tree_ = shd.fit_specs(tree, spec_tree_, mesh)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, spec_tree_)
+
+
+def param_specs(model, mesh):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.spec_tree(shapes, fsdp=model.cfg.fsdp_params,
+                          use_tp=model.cfg.use_tp)
+    return _with_shardings(shapes, specs, mesh)
+
+
+def batch_struct(cfg: ModelConfig, seq: int, batch: int) -> Dict[str, Any]:
+    """abstract train/prefill batch for this architecture."""
+    b: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32),
+    }
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "encdec":
+        b["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_len, cfg.d_model), dt)
+    if cfg.num_patches:
+        b["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), dt)
+    return b
+
+
+def cell_inputs(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns dict(mode, fn_args=(...), metadata) for the cell, where
+    fn_args are fully-sharded ShapeDtypeStructs in the order the lowered
+    step function expects them."""
+    reason = cell_supported(cfg, shape_name)
+    if reason:
+        raise ValueError(f"unsupported cell: {reason}")
+    sh = SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh_params = param_specs(model, mesh)
+    daxes = _data_axes(mesh, cfg)
+
+    if sh["mode"] in ("train", "prefill"):
+        batch = batch_struct(cfg, sh["seq"], sh["batch"])
+        bspecs = shd.batch_spec(batch, mesh, data_axes=daxes)
+        batch = _with_shardings(batch, bspecs, mesh)
+        return dict(mode=sh["mode"], model=model, params=mesh_params,
+                    batch=batch,
+                    seed=jax.ShapeDtypeStruct((), jnp.uint32))
+
+    # decode
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(sh["batch"],
+                                                           sh["seq"]))
+    cspecs = shd.cache_spec(cache_shapes, mesh)
+    cache = _with_shardings(cache_shapes, cspecs, mesh)
+    tok_spec = shd._fit(mesh, sh["batch"], *daxes)
+    tokens = _sds((sh["batch"], 1), jnp.int32, mesh, P(tok_spec, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return dict(mode="decode", model=model, params=mesh_params,
+                cache=cache, tokens=tokens, pos=pos)

@@ -1,0 +1,572 @@
+"""Model assembly for every assigned architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` bundle of pure functions:
+
+  init(key)                          -> params
+  forward(params, batch)             -> logits          (train / prefill)
+  loss(params, batch)                -> scalar          (the ZO objective)
+  init_cache(bsz)                    -> decode cache pytree
+  decode_step(params, cache, tok, pos) -> (logits, cache)
+
+Layer stacks are ``lax.scan``-ed over stacked (L, ...) params so the HLO
+is O(1) in depth -- essential for compiling 61-layer 1T-param configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MoE
+from repro.models import rwkv6 as R
+from repro.models.config import ModelConfig
+
+PyTree = Any
+AUX_LOSS_WEIGHT = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+# ===========================================================================
+# decoder-only LM (dense / moe / vlm-backbone)
+
+
+def _lm_block_init(cfg, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln_attn": L.norm_init(cfg, k1), "attn": L.attn_init(cfg, k2),
+         "ln_ffn": L.norm_init(cfg, k3)}
+    if cfg.n_experts:
+        p["moe"] = MoE.moe_init(cfg, k4)
+    else:
+        p["mlp"] = L.mlp_init(cfg, k4)
+    return p
+
+
+def _lm_block_apply(cfg, p, x, *, positions, kv_mask=None):
+    x = x + L.attn_apply(cfg, p["attn"], L.norm_apply(cfg, p["ln_attn"], x),
+                         positions=positions, kv_mask=kv_mask)
+    h = L.norm_apply(cfg, p["ln_ffn"], x)
+    if cfg.n_experts:
+        fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
+        y, aux = fn(cfg, p["moe"], h)
+    else:
+        y, aux = L.mlp_apply(cfg, p["mlp"], h), jnp.float32(0.0)
+    return x + y, aux
+
+
+def _lm_init(cfg, key):
+    ke, kb, kn, kh = jax.random.split(key, 4)
+    blocks = jax.vmap(lambda k: _lm_block_init(cfg, k))(
+        jax.random.split(kb, cfg.n_layers))
+    p = {"embed": L.embed_init(cfg, ke), "blocks": blocks,
+         "ln_f": L.norm_init(cfg, kn)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab, L._dt(cfg))
+    if cfg.n_classes:
+        p["cls_head"] = L.dense_init(kh, cfg.d_model, cfg.n_classes,
+                                     jnp.float32, bias=True)
+    return p
+
+
+def _lm_backbone(cfg, params, x, positions, kv_mask=None):
+    def body(carry, bp):
+        h, aux = carry
+        h, a = _lm_block_apply(cfg, bp, h, positions=positions,
+                               kv_mask=kv_mask)
+        return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    return L.norm_apply(cfg, params["ln_f"], x), aux
+
+
+def _lm_forward(cfg, params, batch, last_only=False):
+    tokens = batch["tokens"]
+    x = L.embed_apply(cfg, params["embed"], tokens)
+    n_prefix = 0
+    if "patch_embeds" in batch:                    # vlm: prepend stub patches
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+        n_prefix = batch["patch_embeds"].shape[1]
+    positions = jnp.arange(x.shape[1])[None]
+    kv_mask = batch.get("attn_mask")
+    x, aux = _lm_backbone(cfg, params, x, positions, kv_mask)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    if last_only:          # prefill: only the next-token logits are needed
+        x = x[:, -1:]
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, aux
+
+
+def softmax_xent(logits, targets, mask=None):
+    """Cross entropy that never materializes an f32 copy of the logits.
+
+    Two measured pathologies avoided (EXPERIMENTS.md Sec Perf):
+      * ``take_along_axis`` on vocab-sharded logits all-gathers the full
+        logits across the model axis -- replaced by a one-hot masked sum
+        (local + tiny psum);
+      * upcasting logits to f32 with multiple consumers (lse AND gold)
+        writes a full f32 logits tensor to HBM (12.9 GB/chip/pass on
+        granite train_4k) -- instead, max/gold read the bf16 logits and
+        the f32 exp-sum is a single-consumer fusion into its reduce.
+    """
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+    sumexp = jnp.sum(
+        jnp.exp((logits - m[..., None]).astype(jnp.float32)), axis=-1)
+    lse = m.astype(jnp.float32) + jnp.log(sumexp)
+    gold = jnp.sum(
+        jnp.where(jnp.arange(logits.shape[-1]) == targets[..., None],
+                  logits, jnp.zeros((), logits.dtype)),
+        axis=-1).astype(jnp.float32)
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / (jnp.sum(mask) + 1e-9)
+    return jnp.mean(nll)
+
+
+def _lm_loss(cfg, params, batch):
+    if cfg.n_classes:                                 # roberta/SST-2 path
+        logits, aux = _cls_forward(cfg, params, batch)
+        return softmax_xent(logits, batch["label"])
+    logits, aux = _lm_forward(cfg, params, batch)
+    ce = softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
+    return ce + AUX_LOSS_WEIGHT * aux
+
+
+def _cls_forward(cfg, params, batch):
+    """Encoder classification (roberta): CLS pooling + head."""
+    tokens = batch["tokens"]
+    x = L.embed_apply(cfg, params["embed"], tokens)
+    positions = jnp.arange(x.shape[1])[None]
+    x, _ = _lm_backbone(cfg, params, x, positions, batch.get("attn_mask"))
+    cls = x[:, 0].astype(jnp.float32)
+    return L.dense(params["cls_head"], jnp.tanh(cls)), jnp.float32(0.0)
+
+
+def _lm_init_cache(cfg, bsz, max_len, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, bsz, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _decode_attn(cfg, p, x, ck, cv, pos):
+    """One-token attention against a (B, S_max, KV, hd) cache layer."""
+    b = x.shape[0]
+    q, k, v = L.attn_project_qkv(cfg, p, x)       # (B,1,H,hd),(B,1,KV,hd)
+    if cfg.pos == "rope":
+        cs = L.rope_cos_sin(jnp.full((b, 1), pos), cfg.resolved_head_dim,
+                            cfg.rope_pct, cfg.rope_theta)
+        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos, 0, 0))
+    valid = (jnp.arange(ck.shape[1]) <= pos)[None, :]
+    out = L.attention(q, ck, cv, causal=False, kv_mask=valid, chunk=0)
+    return L.dense(p["wo"], out.reshape(b, 1, -1)), ck, cv
+
+
+def _lm_decode_step(cfg, params, cache, tokens, pos):
+    """tokens: (B, 1) -> logits (B, 1, V); cache updated at ``pos``."""
+    x = L.embed_apply(cfg, params["embed"], tokens,
+                      positions=jnp.full((1,), pos))
+
+    def body(h, xs):
+        bp, ck, cv = xs
+        a, ck, cv = _decode_attn(cfg, bp["attn"],
+                                 L.norm_apply(cfg, bp["ln_attn"], h), ck, cv,
+                                 pos)
+        h = h + a
+        f = L.norm_apply(cfg, bp["ln_ffn"], h)
+        if cfg.n_experts:
+            fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
+            y, _ = fn(cfg, bp["moe"], f)
+        else:
+            y = L.mlp_apply(cfg, bp["mlp"], f)
+        return h + y, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {"k": ck, "v": cv}
+
+
+# ===========================================================================
+# hybrid (jamba): super-blocks of [mamba x7 + attn], FFN after each sublayer
+
+
+def _hybrid_block_init(cfg, key):
+    nb = cfg.block_len
+    ks = jax.random.split(key, 2 * nb)
+    p = {}
+    for i in range(nb):
+        sub = {"ln": L.norm_init(cfg, ks[2 * i])}
+        if i == cfg.attn_index:
+            sub["attn"] = L.attn_init(cfg, ks[2 * i + 1])
+        else:
+            sub["mamba"] = M.mamba_init(cfg, ks[2 * i + 1])
+        kf = jax.random.fold_in(ks[2 * i + 1], 7)
+        sub["ln_ffn"] = L.norm_init(cfg, jax.random.fold_in(kf, 1))
+        if cfg.n_experts and i % 2 == 1:
+            sub["moe"] = MoE.moe_init(cfg, kf)
+        else:
+            sub["mlp"] = L.mlp_init(cfg, kf)
+        p[f"sub_{i}"] = sub
+    return p
+
+
+def _hybrid_block_apply(cfg, p, x, positions):
+    aux = jnp.float32(0.0)
+    for i in range(cfg.block_len):
+        sub = p[f"sub_{i}"]
+        h = L.norm_apply(cfg, sub["ln"], x)
+        if i == cfg.attn_index:
+            x = x + L.attn_apply(cfg, sub["attn"], h, positions=positions)
+        else:
+            x = x + M.mamba_apply(cfg, sub["mamba"], h)
+        f = L.norm_apply(cfg, sub["ln_ffn"], x)
+        if "moe" in sub:
+            fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
+            y, a = fn(cfg, sub["moe"], f)
+            aux = aux + a
+        else:
+            y = L.mlp_apply(cfg, sub["mlp"], f)
+        x = x + y
+    return x, aux
+
+
+def _hybrid_init(cfg, key):
+    nb = cfg.n_layers // cfg.block_len
+    ke, kb, kn, kh = jax.random.split(key, 4)
+    blocks = jax.vmap(lambda k: _hybrid_block_init(cfg, k))(
+        jax.random.split(kb, nb))
+    return {"embed": L.embed_init(cfg, ke), "blocks": blocks,
+            "ln_f": L.norm_init(cfg, kn),
+            "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, L._dt(cfg))}
+
+
+def _hybrid_forward(cfg, params, batch, last_only=False):
+    tokens = batch["tokens"]
+    x = L.embed_apply(cfg, params["embed"], tokens)
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(carry, bp):
+        h, aux = carry
+        h, a = _hybrid_block_apply(cfg, bp, h, positions)
+        return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(cfg, params["embed"], params.get("lm_head"), x), aux
+
+
+def _hybrid_loss(cfg, params, batch):
+    logits, aux = _hybrid_forward(cfg, params, batch)
+    return softmax_xent(logits, batch["targets"], batch.get("loss_mask")) \
+        + AUX_LOSS_WEIGHT * aux
+
+
+def _hybrid_init_cache(cfg, bsz, max_len, dtype):
+    nb = cfg.n_layers // cfg.block_len
+    hd = cfg.resolved_head_dim
+    di = cfg.mamba_expand * cfg.d_model
+    n_mamba = cfg.block_len - 1
+    return {
+        "k": jnp.zeros((nb, bsz, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((nb, bsz, max_len, cfg.n_kv_heads, hd), dtype),
+        "conv": jnp.zeros((nb, n_mamba, bsz, cfg.mamba_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((nb, n_mamba, bsz, di, cfg.mamba_d_state),
+                         jnp.float32),
+    }
+
+
+def _hybrid_decode_step(cfg, params, cache, tokens, pos):
+    x = L.embed_apply(cfg, params["embed"], tokens)
+
+    def body(h, xs):
+        bp, ck, cv, conv, ssm = xs
+        new_conv, new_ssm = [], []
+        mi = 0
+        for i in range(cfg.block_len):
+            sub = bp[f"sub_{i}"]
+            z = L.norm_apply(cfg, sub["ln"], h)
+            if i == cfg.attn_index:
+                a, ck, cv = _decode_attn(cfg, sub["attn"], z, ck, cv, pos)
+                h = h + a
+            else:
+                st = {"conv": conv[mi], "ssm": ssm[mi]}
+                y, st = M.mamba_step(cfg, sub["mamba"], st, z)
+                new_conv.append(st["conv"])
+                new_ssm.append(st["ssm"])
+                h = h + y
+                mi += 1
+            f = L.norm_apply(cfg, sub["ln_ffn"], h)
+            if "moe" in sub:
+                fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
+                y, _ = fn(cfg, sub["moe"], f)
+            else:
+                y = L.mlp_apply(cfg, sub["mlp"], f)
+            h = h + y
+        return h, (ck, cv, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+    x, (ck, cv, conv, ssm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["conv"],
+                  cache["ssm"]))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {"k": ck, "v": cv, "conv": conv, "ssm": ssm}
+
+
+# ===========================================================================
+# ssm (rwkv6)
+
+
+def _rwkv_init(cfg, key):
+    ke, kb, kn, kh = jax.random.split(key, 4)
+
+    def block(k):
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        return {"ln1": L.norm_init(cfg, k1), "tm": R.timemix_init(cfg, k2),
+                "ln2": L.norm_init(cfg, k3), "cm": R.channelmix_init(cfg, k4)}
+
+    blocks = jax.vmap(block)(jax.random.split(kb, cfg.n_layers))
+    return {"embed": L.embed_init(cfg, ke), "blocks": blocks,
+            "ln_f": L.norm_init(cfg, kn),
+            "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, L._dt(cfg))}
+
+
+def _rwkv_forward(cfg, params, batch, last_only=False):
+    x = L.embed_apply(cfg, params["embed"], batch["tokens"])
+
+    def body(h, bp):
+        y, _ = R.timemix_apply(cfg, bp["tm"], L.norm_apply(cfg, bp["ln1"], h))
+        h = h + y
+        y, _ = R.channelmix_apply(cfg, bp["cm"],
+                                  L.norm_apply(cfg, bp["ln2"], h))
+        return h + y, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(cfg, params["embed"], params.get("lm_head"), x), \
+        jnp.float32(0.0)
+
+
+def _rwkv_loss(cfg, params, batch):
+    logits, _ = _rwkv_forward(cfg, params, batch)
+    return softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
+
+
+def _rwkv_init_cache(cfg, bsz, max_len, dtype):
+    h, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    ll = cfg.n_layers
+    return {
+        "tm_state": jnp.zeros((ll, bsz, h, hd, hd), jnp.float32),
+        "tm_x": jnp.zeros((ll, bsz, 1, cfg.d_model), dtype),
+        "cm_x": jnp.zeros((ll, bsz, 1, cfg.d_model), dtype),
+    }
+
+
+def _rwkv_decode_step(cfg, params, cache, tokens, pos):
+    x = L.embed_apply(cfg, params["embed"], tokens)
+
+    def body(h, xs):
+        bp, st, tx, cx = xs
+        y, (st, tx) = R.timemix_apply(cfg, bp["tm"],
+                                      L.norm_apply(cfg, bp["ln1"], h),
+                                      state=st, x_prev=tx)
+        h = h + y
+        y, cx = R.channelmix_apply(cfg, bp["cm"],
+                                   L.norm_apply(cfg, bp["ln2"], h), x_prev=cx)
+        return h + y, (st, tx, cx)
+
+    x, (st, tx, cx) = jax.lax.scan(
+        body, x, (params["blocks"], cache["tm_state"], cache["tm_x"],
+                  cache["cm_x"]))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {"tm_state": st, "tm_x": tx, "cm_x": cx}
+
+
+# ===========================================================================
+# encoder-decoder (whisper): stub conv frontend -> enc_embeds in the batch
+
+
+def _encdec_init(cfg, key):
+    ke, kenc, kdec, kn = jax.random.split(key, 4)
+
+    def enc_block(k):
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        return {"ln_attn": L.norm_init(cfg, k1), "attn": L.attn_init(cfg, k2),
+                "ln_ffn": L.norm_init(cfg, k3), "mlp": L.mlp_init(cfg, k4)}
+
+    def dec_block(k):
+        k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
+        return {"ln_self": L.norm_init(cfg, k1), "self": L.attn_init(cfg, k2),
+                "ln_cross": L.norm_init(cfg, k3), "cross": L.attn_init(cfg, k4),
+                "ln_ffn": L.norm_init(cfg, k5), "mlp": L.mlp_init(cfg, k6)}
+
+    return {
+        "embed": L.embed_init(cfg, ke),
+        "enc_blocks": jax.vmap(enc_block)(jax.random.split(kenc, cfg.enc_layers)),
+        "dec_blocks": jax.vmap(dec_block)(jax.random.split(kdec, cfg.dec_layers)),
+        "ln_enc": L.norm_init(cfg, kn),
+        "ln_f": L.norm_init(cfg, jax.random.fold_in(kn, 1)),
+    }
+
+
+def _encode(cfg, params, enc_embeds):
+    x = enc_embeds.astype(L._dt(cfg))
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(h, bp):
+        h = h + L.attn_apply(cfg, bp["attn"],
+                             L.norm_apply(cfg, bp["ln_attn"], h),
+                             positions=positions, causal=False)
+        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln_ffn"], h))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.norm_apply(cfg, params["ln_enc"], x)
+
+
+def _cross_kv(cfg, p, enc_out):
+    b, t, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = L.dense(p["wk"], enc_out).reshape(b, t, cfg.n_kv_heads, hd)
+    v = L.dense(p["wv"], enc_out).reshape(b, t, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _encdec_forward(cfg, params, batch, last_only=False):
+    enc_out = _encode(cfg, params, batch["enc_embeds"])
+    x = L.embed_apply(cfg, params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(h, bp):
+        h = h + L.attn_apply(cfg, bp["self"],
+                             L.norm_apply(cfg, bp["ln_self"], h),
+                             positions=positions, causal=True)
+        kv = _cross_kv(cfg, bp["cross"], enc_out)
+        h = h + L.cross_attn_apply(cfg, bp["cross"],
+                                   L.norm_apply(cfg, bp["ln_cross"], h), kv)
+        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln_ffn"], h))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    return x @ params["embed"]["tok"].T, jnp.float32(0.0)   # whisper ties
+
+
+def _encdec_loss(cfg, params, batch):
+    logits, _ = _encdec_forward(cfg, params, batch)
+    return softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
+
+
+def _encdec_init_cache(cfg, bsz, max_len, dtype):
+    hd = cfg.resolved_head_dim
+    ll = cfg.dec_layers
+    return {
+        "k": jnp.zeros((ll, bsz, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((ll, bsz, max_len, cfg.n_kv_heads, hd), dtype),
+        # cross-attention K/V precomputed from the encoder once per request
+        "xk": jnp.zeros((ll, bsz, cfg.enc_len, cfg.n_kv_heads, hd), dtype),
+        "xv": jnp.zeros((ll, bsz, cfg.enc_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def _encdec_decode_step(cfg, params, cache, tokens, pos):
+    x = L.embed_apply(cfg, params["embed"], tokens,
+                      positions=jnp.full((1,), pos))
+
+    def body(h, xs):
+        bp, ck, cv, xk, xv = xs
+        a, ck, cv = _decode_attn(cfg, bp["self"],
+                                 L.norm_apply(cfg, bp["ln_self"], h), ck, cv,
+                                 pos)
+        h = h + a
+        h = h + L.cross_attn_apply(cfg, bp["cross"],
+                                   L.norm_apply(cfg, bp["ln_cross"], h),
+                                   (xk, xv))
+        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln_ffn"], h))
+        return h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"],
+                                         cache["v"], cache["xk"],
+                                         cache["xv"]))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = x @ params["embed"]["tok"].T
+    return logits, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+# ===========================================================================
+# registry
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    dtype = L._dt(cfg)
+    if cfg.family in ("dense", "moe"):
+        fwd = _cls_forward if cfg.n_classes else _lm_forward
+        return Model(
+            cfg=cfg,
+            init=partial(_lm_init, cfg),
+            forward=partial(fwd, cfg),
+            loss=partial(_lm_loss, cfg),
+            init_cache=lambda bsz, max_len=None: _lm_init_cache(
+                cfg, bsz, max_len or cfg.max_seq, dtype),
+            decode_step=partial(_lm_decode_step, cfg),
+        )
+    if cfg.family == "encoder":
+        return Model(
+            cfg=cfg, init=partial(_lm_init, cfg),
+            forward=partial(_cls_forward, cfg),
+            loss=partial(_lm_loss, cfg),
+            init_cache=lambda *a, **k: (_ for _ in ()).throw(
+                ValueError("encoder-only arch has no decode step")),
+            decode_step=None,
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg, init=partial(_hybrid_init, cfg),
+            forward=partial(_hybrid_forward, cfg),
+            loss=partial(_hybrid_loss, cfg),
+            init_cache=lambda bsz, max_len=None: _hybrid_init_cache(
+                cfg, bsz, max_len or cfg.max_seq, dtype),
+            decode_step=partial(_hybrid_decode_step, cfg),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg, init=partial(_rwkv_init, cfg),
+            forward=partial(_rwkv_forward, cfg),
+            loss=partial(_rwkv_loss, cfg),
+            init_cache=lambda bsz, max_len=None: _rwkv_init_cache(
+                cfg, bsz, max_len or cfg.max_seq, dtype),
+            decode_step=partial(_rwkv_decode_step, cfg),
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg, init=partial(_encdec_init, cfg),
+            forward=partial(_encdec_forward, cfg),
+            loss=partial(_encdec_loss, cfg),
+            init_cache=lambda bsz, max_len=None: _encdec_init_cache(
+                cfg, bsz, max_len or cfg.max_seq, dtype),
+            decode_step=partial(_encdec_decode_step, cfg),
+        )
+    raise ValueError(f"unknown family {cfg.family}")

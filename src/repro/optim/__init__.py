@@ -1,0 +1,7 @@
+"""Derivative-based baselines (the paper's comparison arm: Adam, SGD)."""
+
+from repro.optim.adam import (AdamConfig, AdamState, adam_init, adam_update,
+                              grad_train_step, sgd_train_step)
+
+__all__ = ["AdamConfig", "AdamState", "adam_init", "adam_update",
+           "grad_train_step", "sgd_train_step"]

@@ -1,0 +1,107 @@
+"""Adam / SGD baselines -- the derivative-based arm PocketLLM compares
+against (Table 1/2: Adam OOMs at batch 64 on the phone; MeZO does not).
+
+State is kept in fp32 (two moments), matching the memory model the paper's
+argument rests on: Adam memory = params + grads + 2x fp32 moments
+(+ activations linear in batch). ``memory_analysis`` of this step vs the
+MeZO step is our Table-1 reproduction at TPU scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-5
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0          # 0 = off
+    compress_grads: bool = False    # int8 all-reduce (optim/compression.py)
+
+
+@dataclasses.dataclass
+class AdamState:
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    AdamState,
+    lambda s: ((s.mu, s.nu, s.count), None),
+    lambda _, c: AdamState(*c),
+)
+
+
+def _float_leaves_map(f, *trees):
+    def g(p, *rest):
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            return f(p, *rest)
+        return p
+    return jax.tree.map(g, *trees)
+
+
+def adam_init(params: PyTree) -> AdamState:
+    zeros = _float_leaves_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def adam_update(params: PyTree, grads: PyTree, state: AdamState,
+                cfg: AdamConfig):
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    if cfg.grad_clip:
+        gnorm = jnp.sqrt(sum(jnp.vdot(g.astype(jnp.float32), g.astype(jnp.float32))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v
+                      + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+
+    def upd(p, m, v):
+        step = cfg.lr * (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    params = _float_leaves_map(upd, params, mu, nu)
+    return params, AdamState(mu=mu, nu=nu, count=count)
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1, 3))
+def grad_train_step(loss_fn: Callable, params: PyTree, batch: Any,
+                    state: AdamState, cfg: AdamConfig):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    if cfg.compress_grads:
+        from repro.optim.compression import int8_compress_tree
+        grads = int8_compress_tree(grads)
+    params, state = adam_update(params, grads, state, cfg)
+    return params, state, loss
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "lr"), donate_argnums=(1,))
+def sgd_train_step(loss_fn: Callable, params: PyTree, batch: Any,
+                   lr: float = 1e-4):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    params = _float_leaves_map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return params, loss

@@ -1,0 +1,4 @@
+from repro.roofline.hlo import collective_bytes, parse_collectives
+from repro.roofline.analysis import roofline_terms
+
+__all__ = ["collective_bytes", "parse_collectives", "roofline_terms"]

@@ -1,0 +1,6 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.stragglers import StragglerPolicy
+from repro.runtime.elastic import elastic_mesh, remesh_params
+
+__all__ = ["Trainer", "TrainerConfig", "StragglerPolicy", "elastic_mesh",
+           "remesh_params"]

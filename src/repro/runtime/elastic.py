@@ -1,0 +1,60 @@
+"""Elastic scaling for ZO training.
+
+Because params are replicated across the ``pod`` axis and cross-pod state
+is only the per-step (seed, gs) scalars, pods joining or leaving changes
+*nothing* about parameter sharding -- only the direction count K. Elastic
+events therefore cost:
+
+  * pod join:  broadcast params into the new pod (one transfer), K += k
+  * pod leave: K -= k, continue same step (ZO drop-direction semantics)
+
+``elastic_mesh`` rebuilds the mesh for the current device count;
+``remesh_params`` moves live params onto it (a device_put resharding; for
+a same-(data,model)-topology change this is pod-broadcast only).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models import sharding as shd
+
+PyTree = Any
+
+
+def elastic_mesh(devices=None, model_parallel: int = 16,
+                 data_parallel: int = 16):
+    """Mesh for however many devices are currently alive.
+
+    Keeps the intra-pod (data, model) topology fixed (so param shardings
+    stay valid) and absorbs device-count changes into the pod axis.
+    Falls back to shrinking data_parallel when fewer than one pod's
+    devices remain (degraded single-pod mode).
+    """
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    per_pod = model_parallel * data_parallel
+    n = devices.size
+    if n >= per_pod:
+        pods = n // per_pod
+        devs = devices[: pods * per_pod].reshape(pods, data_parallel,
+                                                 model_parallel)
+        return Mesh(devs, ("pod", "data", "model"))
+    # degraded: one partial pod -- keep model axis, shrink data axis
+    dp = max(1, n // model_parallel)
+    if dp * model_parallel > n:
+        model_parallel = n
+        dp = 1
+    devs = devices[: dp * model_parallel].reshape(1, dp, model_parallel)
+    return Mesh(devs, ("pod", "data", "model"))
+
+
+def remesh_params(params: PyTree, new_mesh: Mesh) -> PyTree:
+    """Reshard live params onto a new mesh (pod join/leave)."""
+    specs = shd.spec_tree(params)
+    return jax.tree.map(
+        lambda p, s: jax.device_put(p, NamedSharding(new_mesh, s)),
+        params, specs)

@@ -1,0 +1,128 @@
+"""Fault-tolerant training loop for ZO (MeZO) and gradient (Adam) arms.
+
+Responsibilities: build model + shardings, auto-resume (snapshot + replay
+log), per-step straggler masks, metrics, periodic checkpointing. The loop
+is deliberately dumb -- all cleverness lives in core/ and checkpoint/ --
+so its failure behavior is auditable: any crash between two ``on_step``
+calls loses at most the step in flight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import rng as zrng
+from repro.core.mezo import MezoConfig, mezo_step, mezo_step_vmapdir
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.optim.adam import AdamConfig, adam_init, grad_train_step
+from repro.runtime.stragglers import StragglerPolicy
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    optimizer: str = "mezo"          # mezo | mezo-parallel | adam
+    mezo: MezoConfig = MezoConfig()
+    adam: AdamConfig = AdamConfig()
+    n_steps: int = 100
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    snapshot_every: int = 100
+    log_every: int = 10
+    straggler_redundancy: int = 0
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainerConfig,
+                 batches: Iterator[Any], mesh=None,
+                 log_fn: Callable[[str], None] = print):
+        self.mcfg = model_cfg
+        self.tcfg = train_cfg
+        self.model = build_model(model_cfg)
+        self.batches = batches
+        self.mesh = mesh
+        self.log = log_fn
+        self.losses: list = []
+        self._straggler = (StragglerPolicy(
+            train_cfg.mezo.n_directions,
+            train_cfg.straggler_redundancy)
+            if train_cfg.straggler_redundancy else None)
+
+        self.ckpt = (CheckpointManager(
+            train_cfg.ckpt_dir,
+            mezo_cfg=(train_cfg.mezo if train_cfg.optimizer != "adam"
+                      else None),
+            snapshot_every=train_cfg.snapshot_every)
+            if train_cfg.ckpt_dir else None)
+
+    # -- setup ------------------------------------------------------------
+    def init_params(self) -> PyTree:
+        return self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+
+    def _mezo_cfg(self) -> MezoConfig:
+        c = self.tcfg.mezo
+        if self._straggler:
+            c = dataclasses.replace(
+                c, n_directions=self._straggler.total)
+        return c
+
+    # -- main loop --------------------------------------------------------
+    def train(self, params: Optional[PyTree] = None,
+              fail_at: Optional[int] = None) -> PyTree:
+        """Runs to n_steps with auto-resume. ``fail_at`` raises at that
+        step (fault-injection for tests)."""
+        start = 0
+        if params is None:
+            params = self.init_params()
+            if self.ckpt:
+                restored, start = self.ckpt.restore(params)
+                if restored is not None:
+                    params = restored
+                    self.log(f"[trainer] resumed at step {start}")
+
+        opt_state = None
+        if self.tcfg.optimizer == "adam":
+            opt_state = adam_init(params)
+
+        mcfg = self._mezo_cfg()
+        step_fn = {"mezo": mezo_step, "mezo-parallel": mezo_step_vmapdir,
+                   "adam": None}[self.tcfg.optimizer]
+
+        t0 = time.perf_counter()
+        for step in range(start, self.tcfg.n_steps):
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = next(self.batches)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            seed = zrng.fold_seed(jnp.uint32(self.tcfg.seed), step)
+
+            if self.tcfg.optimizer == "adam":
+                params, opt_state, loss = grad_train_step(
+                    self.model.loss, params, batch, opt_state,
+                    self.tcfg.adam)
+                aux = None
+                self.losses.append(float(loss))
+            else:
+                mask = None
+                if self._straggler:
+                    mask = jnp.asarray(self._straggler.mask())
+                params, aux = step_fn(self.model.loss, params, batch, seed,
+                                      mcfg, mask)
+                self.losses.append(float(aux.loss))
+
+            if self.ckpt:
+                self.ckpt.on_step(step, params, aux)
+            if step % self.tcfg.log_every == 0:
+                dt = time.perf_counter() - t0
+                self.log(f"[trainer] step={step} loss={self.losses[-1]:.4f} "
+                         f"({dt:.1f}s)")
+        return params

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see the default 1-device CPU backend (the dry-run sets its own
+# XLA_FLAGS in a separate process -- never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,68 @@
+"""Per-kernel shape/dtype sweeps asserting allclose vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+ADD_SHAPES = [(8, 128), (128, 128), (256, 512), (384, 640), (100, 300)]
+MM_SHAPES = [(8, 128, 128), (128, 256, 128), (64, 384, 256), (32, 100, 60)]
+
+
+@pytest.mark.parametrize("dist", ["rademacher", "gaussian"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", ADD_SHAPES)
+def test_zo_add_sweep(shape, dtype, dist):
+    w = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+    got = ops.zo_add(w, 42, 777, 0.125, dist=dist)
+    want = ref.zo_add_ref(w, jnp.uint32(42), 777, 0.125, dist=dist)
+    assert got.dtype == w.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dist", ["rademacher", "gaussian"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn", MM_SHAPES)
+def test_zo_matmul_sweep(mkn, dtype, dist):
+    m, k, n = mkn
+    x = (jax.random.normal(KEY, (m, k), jnp.float32) * 0.1).astype(dtype)
+    w = (jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), jnp.float32)
+         * 0.1).astype(dtype)
+    got = ops.zo_matmul(x, w, 7, 123, 0.01, dist=dist)
+    want = ref.zo_matmul_ref(x, w, jnp.uint32(7), 123, 0.01, dist=dist)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_zo_add_block_invariance():
+    """Result must not depend on the BlockSpec tiling."""
+    w = jax.random.normal(KEY, (256, 256), jnp.float32)
+    a = ops.zo_add(w, 3, 9, 1.0, block=(256, 256))
+    b = ops.zo_add(w, 3, 9, 1.0, block=(64, 128))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zo_matmul_block_invariance():
+    x = jax.random.normal(KEY, (128, 256), jnp.float32) * 0.1
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (256, 128),
+                          jnp.float32) * 0.1
+    a = ops.zo_matmul(x, w, 5, 6, 0.5, blocks=(128, 256, 128))
+    b = ops.zo_matmul(x, w, 5, 6, 0.5, blocks=(64, 64, 64))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_zero_coeff_is_identity_matmul():
+    x = jax.random.normal(KEY, (64, 128), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (128, 64), jnp.float32)
+    got = ops.zo_matmul(x, w, 0, 0, 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,86 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rng as zrng
+from repro.core.mezo import _direction_coeffs
+from repro.models.sharding import fit_spec
+from repro.models.transformer import softmax_xent
+from repro.optim.compression import int8_dequantize, int8_quantize
+from jax.sharding import Mesh, PartitionSpec as P
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(seed=st.integers(0, 2**32 - 1), salt=st.integers(0, 2**32 - 1),
+       rows=st.integers(1, 40), cols=st.integers(1, 40),
+       r0=st.integers(0, 1000), c0=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_rng_tile_equals_slice(seed, salt, rows, cols, r0, c0):
+    """Any tile with offsets == the same slice of a bigger field."""
+    full = zrng.z_field(jnp.uint32(seed), salt, (r0 + rows, c0 + cols))
+    tile = zrng.z_field(jnp.uint32(seed), salt, (rows, cols),
+                        offsets=(r0, c0))
+    np.testing.assert_array_equal(np.asarray(full[r0:, c0:]),
+                                  np.asarray(tile))
+
+
+@given(k=st.integers(1, 16), lr=st.floats(1e-6, 1.0),
+       data=st.data())
+@settings(**SETTINGS)
+def test_direction_coeffs_sum_preserved(k, lr, data):
+    """Masked renormalization keeps |sum coeffs| == lr (unbiased scale)."""
+    mask = np.array(data.draw(st.lists(st.sampled_from([0.0, 1.0]),
+                                       min_size=k, max_size=k)), np.float32)
+    coeffs = np.asarray(_direction_coeffs(k, jnp.float32(lr), mask))
+    if mask.sum() == 0:
+        return
+    np.testing.assert_allclose(-coeffs.sum(), lr, rtol=1e-5)
+    assert (coeffs[mask == 0] == 0).all()
+
+
+@given(b=st.integers(1, 4), s=st.integers(1, 8), v=st.integers(2, 30),
+       seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_softmax_xent_matches_numpy(b, s, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((b, s, v)).astype(np.float32) * 3
+    targets = rng.integers(0, v, (b, s))
+    got = float(softmax_xent(jnp.asarray(logits), jnp.asarray(targets)))
+    ex = np.exp(logits - logits.max(-1, keepdims=True))
+    p = ex / ex.sum(-1, keepdims=True)
+    want = -np.log(np.take_along_axis(p, targets[..., None], -1)).mean()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+@settings(**SETTINGS)
+def test_int8_compression_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((64,)).astype(np.float32) * scale)
+    q, s = int8_quantize(g)
+    back = int8_dequantize(q, s)
+    # error bounded by one quantization bucket
+    assert float(jnp.max(jnp.abs(back - g))) <= float(s) + 1e-6
+
+
+@given(dim=st.integers(1, 64), nd=st.integers(1, 3),
+       data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_fit_spec_always_divides(dim, nd, data):
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = Mesh(devs, ("data", "model"))
+    axes = data.draw(st.lists(st.sampled_from([None, "data", "model"]),
+                              min_size=nd, max_size=nd, unique_by=id))
+    shape = tuple(data.draw(st.integers(1, 64)) for _ in range(nd))
+    spec = fit_spec(shape, P(*axes), mesh)
+    sizes = {"data": 4, "model": 4}
+    for d, entry in enumerate(spec):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        prod = int(np.prod([sizes[n] for n in names]))
+        assert shape[d] % prod == 0

@@ -1,0 +1,81 @@
+"""Sharding rules: TP/EP placements, divisibility fitting, cache layouts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model, sharding as shd
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    return Mesh(devs, ("data", "model"))
+
+
+def _specs_for(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return shapes, shd.spec_tree(shapes)
+
+
+def test_attention_tp_rules():
+    shapes, specs = _specs_for("qwen3-4b")
+    blk = specs["blocks"]
+    assert blk["attn"]["wq"]["w"] == P(None, None, "model")
+    assert blk["attn"]["wo"]["w"] == P(None, "model", None)
+    assert blk["ln_attn"]["scale"] == P()
+    assert specs["embed"]["tok"] == P("model", None)
+
+
+def test_moe_ep_rules():
+    shapes, specs = _specs_for("granite-moe-1b-a400m")
+    blk = specs["blocks"]
+    assert blk["moe"]["w_in"] == P(None, "model", None, None, None)
+    assert blk["moe"]["w_out"] == P(None, "model", None, None)
+    assert blk["moe"]["router"] == P(None, None, None)
+
+
+def test_rwkv_rules():
+    shapes, specs = _specs_for("rwkv6-7b")
+    blk = specs["blocks"]
+    assert blk["tm"]["wr"]["w"] == P(None, None, "model")
+    assert blk["tm"]["wo"]["w"] == P(None, "model", None)
+
+
+def test_fit_spec_odd_vocab(mesh):
+    # granite's 49155 vocab cannot shard 4 ways -> replicated
+    s = shd.fit_spec((49155, 64), P("model", None), mesh)
+    assert s == P(None, None)
+    s2 = shd.fit_spec((49156, 64), P("model", None), mesh)
+    assert s2 == P("model", None)
+
+
+def test_cache_spec_kv_and_state(mesh):
+    cfg = get_config("jamba-v0.1-52b")
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(8, 64))
+    cs = shd.cache_spec(cache, mesh)
+    assert cs["k"][1] == "data"          # batch
+    assert cs["k"][2] == "model"         # sequence-parallel cache
+    assert cs["conv"][2] == "data"
+    assert cs["ssm"][3] == "model"       # d_inner
+
+
+def test_cache_spec_batch1_spills_seq_to_data(mesh):
+    cfg = get_config("jamba-v0.1-52b")
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(1, 1024))
+    cs = shd.cache_spec(cache, mesh)
+    # batch=1: seq axis takes both mesh axes
+    assert cs["k"][2] == ("model", "data")
+
+
+def test_maybe_shard_is_noop_without_mesh():
+    x = jnp.ones((8, 8))
+    y = shd.maybe_shard(x, "model", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,73 @@
+"""Trainer integration: fault injection + resume, straggler + adam arms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import MezoConfig
+from repro.data.synthetic import lm_batches
+from repro.optim.adam import AdamConfig
+from repro.runtime import StragglerPolicy, Trainer, TrainerConfig
+
+CFG = get_config("qwen3-4b").reduced()
+
+
+def _batches(start=0):
+    return lm_batches(4, 16, CFG.vocab, seed=3, start_step=start)
+
+
+def test_crash_resume_matches_uninterrupted(tmp_path):
+    n = 14
+    mz = MezoConfig(eps=1e-2, lr=1e-2, n_directions=2)
+
+    tc_a = TrainerConfig(optimizer="mezo", mezo=mz, n_steps=n,
+                         ckpt_dir=str(tmp_path / "a"), snapshot_every=5,
+                         log_every=100)
+    tr_a = Trainer(CFG, tc_a, _batches())
+    p_full = tr_a.train()
+
+    tc_b = TrainerConfig(optimizer="mezo", mezo=mz, n_steps=n,
+                         ckpt_dir=str(tmp_path / "b"), snapshot_every=5,
+                         log_every=100)
+    with pytest.raises(RuntimeError):
+        Trainer(CFG, tc_b, _batches()).train(fail_at=9)
+    # fresh process resumes from snapshot@5 + replay 6..8
+    tr_c = Trainer(CFG, tc_b, _batches(start=9))
+    p_res = tr_c.train()
+
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=5e-5)
+
+
+def test_adam_arm_descends():
+    tc = TrainerConfig(optimizer="adam", adam=AdamConfig(lr=3e-3),
+                       n_steps=15, log_every=100)
+    tr = Trainer(CFG, tc, _batches())
+    tr.train()
+    assert tr.losses[-1] < tr.losses[0]
+
+
+def test_straggler_policy_masks():
+    pol = StragglerPolicy(n_directions=4, redundancy=2)
+    m = pol.mask()
+    assert m.shape == (6,)
+    assert m.sum() == 6  # no latency info yet -> keep all
+    pol.observe([1, 1, 1, 1, 1, 50.0])
+    m = pol.mask()
+    assert m[5] == 0          # slow direction dropped
+    assert m.sum() <= 4       # fastest-K selection
+    m2 = pol.mask(slow=[0])
+    assert m2[0] == 0
+
+
+def test_straggler_trainer_arm():
+    tc = TrainerConfig(optimizer="mezo-parallel",
+                       mezo=MezoConfig(eps=1e-2, lr=1e-2, n_directions=2),
+                       n_steps=3, straggler_redundancy=2, log_every=100)
+    tr = Trainer(CFG, tc, _batches())
+    tr.train()
+    assert len(tr.losses) == 3
