@@ -16,10 +16,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import MezoConfig, mezo_step, mezo_step_vmapdir
+from repro.core import (MezoConfig, mezo_step, mezo_step_fused,
+                        mezo_step_vmapdir)
 from repro.data.synthetic import lm_batch_at, synthetic_lm_corpus
 from repro.models import build_model
 from repro.optim.adam import AdamConfig, adam_init, grad_train_step
+
+
+def param_sweeps_per_step(strategy: str, k: int) -> int:
+    """Full parameter-sweep passes per step, beyond the shared seed-replay
+    update: the sequential walk pays perturb / counter-perturb / restore
+    (3 per direction); vmapdir pays one transient perturbed copy per side
+    (2 per direction); the fused perturbed forward pays none -- z is
+    applied inside the matmul tiles."""
+    return {"mezo": 3 * k, "mezo_vmapdir": 2 * k, "mezo_fused": 0}[strategy]
 
 
 def _time_steps(fn, n=5):
@@ -42,6 +52,7 @@ def run(out_dir="experiments/bench"):
     stream = synthetic_lm_corpus(64 * 40 * 33, cfg.vocab, 0)
     rows, table = [], {}
 
+    bs_k = 1            # directions per step in the bs arms below
     for bs in (8, 64):
         def batch_at(t):
             return {k: jnp.asarray(v) for k, v in
@@ -49,7 +60,7 @@ def run(out_dir="experiments/bench"):
 
         # mezo
         p = jax.tree.map(jnp.copy, params0)
-        mcfg = MezoConfig(eps=1e-3, lr=1e-5)
+        mcfg = MezoConfig(eps=1e-3, lr=1e-5, n_directions=bs_k)
         state = {"p": p}
 
         def mezo_fn(t):
@@ -57,8 +68,30 @@ def run(out_dir="experiments/bench"):
                                       jnp.uint32(t), mcfg)
             jax.block_until_ready(jax.tree.leaves(state["p"])[0])
         us = _time_steps(mezo_fn)
-        rows.append((f"table2/mezo/bs{bs}", us, ""))
+        rows.append((f"table2/mezo/bs{bs}", us,
+                     f"{param_sweeps_per_step('mezo', mcfg.n_directions)} "
+                     f"param sweeps/step"))
         table[f"mezo/bs{bs}"] = us
+
+        # mezo fused: perturbed forward, no perturb/restore sweeps. NB on
+        # CPU this times the transient-jnp fallback (use_kernel=False --
+        # interpret-mode Pallas would benchmark the Python interpreter);
+        # the in-tile zo_matmul path engages on TPU via use_kernel=True
+        p = jax.tree.map(jnp.copy, params0)
+        fstate = {"p": p}
+        fcfg = MezoConfig(eps=1e-3, lr=1e-5, n_directions=bs_k,
+                          use_kernel=jax.default_backend() == "tpu")
+
+        def fused_fn(t):
+            fstate["p"], _ = mezo_step_fused(model.loss, fstate["p"],
+                                             batch_at(t), jnp.uint32(t), fcfg)
+            jax.block_until_ready(jax.tree.leaves(fstate["p"])[0])
+        us = _time_steps(fused_fn)
+        rows.append((f"table2/mezo_fused/bs{bs}", us,
+                     f"{param_sweeps_per_step('mezo_fused', mcfg.n_directions)}"
+                     f" param sweeps/step (jnp fallback; kernel path is "
+                     f"TPU-only)"))
+        table[f"mezo_fused/bs{bs}"] = us
 
         # adam
         p = jax.tree.map(jnp.copy, params0)
@@ -76,18 +109,22 @@ def run(out_dir="experiments/bench"):
     # K-direction scaling (the parallelism the phone couldn't exploit)
     for k in (1, 4):
         p = jax.tree.map(jnp.copy, params0)
-        mcfg = MezoConfig(eps=1e-3, lr=1e-5, n_directions=k)
+        kcfg = MezoConfig(eps=1e-3, lr=1e-5, n_directions=k)
         st = {"p": p}
 
         def kfn(t):
             st["p"], _ = mezo_step_vmapdir(model.loss, st["p"], batch_at(t),
-                                           jnp.uint32(t), mcfg)
+                                           jnp.uint32(t), kcfg)
             jax.block_until_ready(jax.tree.leaves(st["p"])[0])
         us = _time_steps(kfn, n=3)
         rows.append((f"table2/mezo_vmapdir/K{k}", us,
                      "directions evaluated concurrently"))
         table[f"mezo_vmapdir/K{k}"] = us
 
+    # K of the bs arms above (counts scale linearly in K)
+    table["param_sweeps_per_step"] = {
+        s: param_sweeps_per_step(s, bs_k)
+        for s in ("mezo", "mezo_vmapdir", "mezo_fused")}
     with open(os.path.join(out_dir, "table2_walltime.json"), "w") as f:
         json.dump(table, f, indent=1)
     return rows

@@ -1,15 +1,17 @@
 """Core: PocketLLM's derivative-free (zeroth-order) fine-tuning engine."""
 
 from repro.core.mezo import (MezoAux, MezoConfig, mezo_momentum_step,
-                             mezo_step, mezo_step_vmapdir,
+                             mezo_step, mezo_step_fused, mezo_step_vmapdir,
                              momentum_history_init, replay_update,
                              spsa_gradient_estimate)
 from repro.core.perturb import add_scaled_z, dot_with_z, leaf_salts
+from repro.core.perturb_ctx import PerturbCtx
 from repro.core.rng import fold_seed, gaussian_field, rademacher_field, z_field
 
 __all__ = [
-    "MezoAux", "MezoConfig", "mezo_momentum_step", "momentum_history_init",
-    "mezo_step", "mezo_step_vmapdir",
+    "MezoAux", "MezoConfig", "PerturbCtx", "mezo_momentum_step",
+    "momentum_history_init", "mezo_step", "mezo_step_fused",
+    "mezo_step_vmapdir",
     "replay_update", "spsa_gradient_estimate", "add_scaled_z", "dot_with_z",
     "leaf_salts", "fold_seed", "gaussian_field", "rademacher_field", "z_field",
 ]

@@ -8,21 +8,36 @@ Implements SPSA (Spall 1992) with MeZO's seed-replay storage trick
     g  = (l+ - l-) / (2 eps)
     theta <- theta - lr * g * z
 
-Two execution strategies:
+Three execution strategies:
 
 * ``mezo_step`` -- sequential over K directions with the *in-place walk*
   (perturb / eval / counter-perturb / eval / restore-fused-with-update):
   peak memory = params + one forward's activations. This is the
-  paper-faithful memory profile (PocketLLM Table 1).
+  paper-faithful memory profile (PocketLLM Table 1). Cost: 3 full
+  parameter sweeps per direction on top of the 2 forwards.
 
 * ``mezo_step_vmapdir`` -- vmaps direction evaluation so a pod axis can
   evaluate directions concurrently (PocketLLM Sec 6.3's "inherent
   parallelization potential", realized). Costs one extra transient param
   copy per device; cross-pod traffic is K scalars, not N gradients.
 
-Both return the new params plus a :class:`MezoAux` record whose
+* ``mezo_step_fused`` -- the perturbation never touches the parameters at
+  all: a :class:`repro.core.perturb_ctx.PerturbCtx` with ``coeff=+/-eps``
+  rides into the forward and each dense projection computes
+  ``X @ (W + coeff*z)`` via the fused Pallas kernel (z regenerated in
+  VMEM). 0 param sweeps per direction, no whole-tree transient copy;
+  non-matmul leaves (norm scales, gated MLP weights, tied unembeds) fall
+  back to a transient leaf-sized ``coeff*z``, and the only remaining
+  sweep is the shared seed-replay update. Requires a loss_fn that
+  accepts ``perturb=`` (models built by repro.models.build_model do;
+  families without a wired fused forward fall back to one transient
+  materialized copy, the vmapdir memory profile).
+
+All return the new params plus a :class:`MezoAux` record whose
 ``(seed, gs)`` pair is exactly what the replay-log checkpointer persists
-(~12 bytes/step/direction) -- see repro/checkpoint/replay_log.py.
+(~12 bytes/step/direction) -- see repro/checkpoint/replay_log.py. The
+fused step shares the update arithmetic of ``mezo_step_vmapdir``
+(pristine base point), so its replay is bit-exact.
 """
 
 from __future__ import annotations
@@ -36,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.core import rng as zrng
 from repro.core.perturb import add_scaled_z
+from repro.core.perturb_ctx import PerturbCtx
 
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jnp.ndarray]  # (params, batch) -> scalar
@@ -118,14 +134,7 @@ def mezo_step(loss_fn: LossFn, params: PyTree, batch: Any, seed,
 
     params, (gs, ls) = jax.lax.scan(
         one_dir, params, jnp.arange(kk, dtype=jnp.uint32))
-
-    coeffs = _direction_coeffs(kk, lr, direction_mask)
-    if cfg.weight_decay:
-        params = _decay(params, lr * cfg.weight_decay)
-    params = _apply_direction_updates(params, seed, gs, coeffs, cfg)
-    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
-                  grad_norm_est=jnp.abs(gs).mean())
-    return params, aux
+    return _finish_step(params, seed, gs, ls, lr, direction_mask, cfg)
 
 
 def _direction_coeffs(kk: int, lr, direction_mask):
@@ -133,6 +142,19 @@ def _direction_coeffs(kk: int, lr, direction_mask):
         return jnp.full((kk,), -lr / kk, jnp.float32)
     m = jnp.asarray(direction_mask, jnp.float32).reshape(kk)
     return -lr * m / jnp.maximum(m.sum(), 1.0)
+
+
+def _finish_step(params, seed, gs, ls, lr, direction_mask, cfg: MezoConfig):
+    """Shared update tail of every strategy: identical f32 arithmetic here
+    is what makes the (seed, gs) replay log interchangeable across them
+    (and bit-exact for the pristine-base-point strategies)."""
+    coeffs = _direction_coeffs(cfg.n_directions, lr, direction_mask)
+    if cfg.weight_decay:
+        params = _decay(params, lr * cfg.weight_decay)
+    params = _apply_direction_updates(params, seed, gs, coeffs, cfg)
+    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
+                  grad_norm_est=jnp.abs(gs).mean())
+    return params, aux
 
 
 @partial(jax.jit, static_argnames=("loss_fn", "cfg"))
@@ -157,14 +179,39 @@ def mezo_step_vmapdir(loss_fn: LossFn, params: PyTree, batch: Any, seed,
         return (lp - lm) / (2.0 * eps), 0.5 * (lp + lm)
 
     gs, ls = jax.vmap(eval_dir)(jnp.arange(kk, dtype=jnp.uint32))
+    return _finish_step(params, seed, gs, ls, lr, direction_mask, cfg)
 
-    coeffs = _direction_coeffs(kk, lr, direction_mask)
-    if cfg.weight_decay:
-        params = _decay(params, lr * cfg.weight_decay)
-    params = _apply_direction_updates(params, seed, gs, coeffs, cfg)
-    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
-                  grad_norm_est=jnp.abs(gs).mean())
-    return params, aux
+
+@partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1,))
+def mezo_step_fused(loss_fn: LossFn, params: PyTree, batch: Any, seed,
+                    cfg: MezoConfig, direction_mask=None):
+    """Fused perturbed-forward MeZO step: 0 param sweeps per direction.
+
+    l+ and l- are evaluated with ``coeff=+/-eps`` carried into the forward
+    by a :class:`PerturbCtx` -- params are read-only until the final
+    seed-replay update, which is shared with the other strategies (so the
+    (seed, gs) replay log stays interchangeable). ``loss_fn`` must accept
+    a ``perturb=`` keyword; both sides of each direction see the exact
+    z-fields ``add_scaled_z`` would apply, so losses match
+    ``mezo_step_vmapdir`` bit-for-bit on the jnp path in f32.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    eps = jnp.float32(cfg.eps)
+    lr = jnp.float32(cfg.lr)
+    kk = cfg.n_directions
+
+    def one_dir(_, k):
+        s = zrng.fold_seed(seed, k)
+        ctx = PerturbCtx(seed=s, coeff=eps, dist=cfg.dist,
+                         use_kernel=cfg.use_kernel)
+        lp = loss_fn(params, batch, perturb=ctx)
+        lm = loss_fn(params, batch,
+                     perturb=dataclasses.replace(ctx, coeff=-eps))
+        return None, ((lp - lm) / (2.0 * eps), 0.5 * (lp + lm))
+
+    _, (gs, ls) = jax.lax.scan(one_dir, None,
+                               jnp.arange(kk, dtype=jnp.uint32))
+    return _finish_step(params, seed, gs, ls, lr, direction_mask, cfg)
 
 
 @partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1,))

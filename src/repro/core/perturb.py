@@ -43,6 +43,13 @@ def is_perturbable(path_str: str) -> bool:
     return True
 
 
+def kernel_aligned(shape) -> bool:
+    """MXU tile-alignment gate for routing a leaf through the Pallas ZO
+    kernels (zo_add / zo_matmul); the single source of truth for both the
+    perturb-sweep and fused-forward paths."""
+    return len(shape) == 2 and shape[0] % 8 == 0 and shape[1] % 128 == 0
+
+
 def add_scaled_z(params: PyTree, seed, coeff, dist: str = "rademacher",
                  use_kernel: bool = False) -> PyTree:
     """theta + coeff * z(seed), leaf-wise, z regenerated (never stored).
@@ -63,7 +70,7 @@ def add_scaled_z(params: PyTree, seed, coeff, dist: str = "rademacher",
             out.append(leaf)
             continue
         salt = zrng.leaf_salt(ps)
-        if use_kernel and leaf.ndim == 2 and leaf.shape[0] % 8 == 0 and leaf.shape[1] % 128 == 0:
+        if use_kernel and kernel_aligned(leaf.shape):
             from repro.kernels import ops as kops  # lazy: pallas import
             out.append(kops.zo_add(leaf, seed, salt, coeff, dist=dist))
         else:

@@ -1,0 +1,142 @@
+"""Perturbed-forward execution context (the fused MeZO path).
+
+The sequential ``mezo_step`` realizes theta ± eps*z with three full
+parameter sweeps per direction (perturb / counter-perturb / restore), and
+``mezo_step_vmapdir`` with one transient param-sized copy. The fused path
+removes both: the *unperturbed* params flow into the forward together with
+a :class:`PerturbCtx` carrying ``(seed, coeff, dist)``, and each consumer
+applies its leaf's perturbation at the point of use --
+
+  * dense projections (QKV/O, MLP up/down, LM head) compute
+    ``X @ (W + coeff*z)`` via the fused Pallas kernel
+    ``repro.kernels.ops.zo_matmul`` (z regenerated tile-wise in VMEM,
+    zero HBM bytes) or, on non-aligned shapes / without ``use_kernel``,
+    via a transient jnp materialization that XLA fuses into the matmul;
+  * embedding gathers perturb only the gathered rows
+    (``rng.z_rows``: O(tokens*d), never O(vocab*d));
+  * small leaves (norm scales, biases) add a transient ``coeff*z``.
+
+Bit-compatibility contract: salts are derived from the same pytree path
+strings as ``core.perturb._path_str``, and scan-stacked ``(L, ...)``
+block leaves are handled by folding the layer index into a pre-hashed
+base (``rng.leaf_base`` / ``rng.fold_leading``) with ``prime_offset=1``.
+So for every leaf the fused forward sees *exactly* the z-field that
+``add_scaled_z`` (and therefore ``spsa_gradient_estimate`` and the
+replay-log checkpointer) would apply to the stacked parameter tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as zrng
+from repro.core.perturb import _path_str, is_perturbable, kernel_aligned
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PerturbCtx:
+    """theta + coeff * z(seed), applied lazily at each parameter's use site.
+
+    seed/coeff may be traced (they are scan/vmap-carried in the fused MeZO
+    step); dist / use_kernel / prefix are trace-time static.
+    """
+    seed: Any                        # uint32 scalar step/direction seed
+    coeff: Any                       # f32 scalar: +eps or -eps
+    dist: str = "rademacher"
+    use_kernel: bool = False         # route aligned 2-D matmuls via Pallas
+    prefix: str = ""                 # pytree path of the current scope
+    layer: Optional[Any] = None      # leading (scan) index into stacked leaves
+
+    # -- scope plumbing ----------------------------------------------------
+
+    def scope(self, name: str) -> "PerturbCtx":
+        """Descend into a param sub-dict (extends the salt path)."""
+        p = f"{self.prefix}/{name}" if self.prefix else name
+        return dataclasses.replace(self, prefix=p)
+
+    def at_layer(self, idx) -> "PerturbCtx":
+        """Bind the leading scan index of stacked (L, ...) leaves."""
+        return dataclasses.replace(self, layer=jnp.asarray(idx, jnp.uint32))
+
+    def _leaf(self, name: str):
+        """(full path, pre-hashed base, prime offset) for a named leaf."""
+        path = f"{self.prefix}/{name}" if self.prefix else name
+        base = zrng.leaf_base(self.seed, zrng.leaf_salt(path))
+        off = 0
+        if self.layer is not None:
+            base = zrng.fold_leading(base, self.layer, dim=0)
+            off = 1
+        return path, base, off
+
+    def _coeff(self):
+        return jnp.asarray(self.coeff, jnp.float32)
+
+    # -- perturbation primitives ------------------------------------------
+
+    def perturb(self, name: str, leaf):
+        """leaf + coeff*z, transient (the jnp fallback for any leaf)."""
+        path, base, off = self._leaf(name)
+        if not is_perturbable(path) or \
+                not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        z = zrng.z_field(None, 0, leaf.shape, jnp.float32, self.dist,
+                         prime_offset=off, base=base)
+        return (leaf.astype(jnp.float32) + self._coeff() * z).astype(leaf.dtype)
+
+    def matmul(self, x, w, name: str = "w"):
+        """x @ (w + coeff*z) for x (..., K), w (K, N).
+
+        MXU-aligned 2-D weights go through the fused Pallas kernel (z never
+        leaves VMEM); everything else falls back to a transient jnp
+        materialization with identical values (ref.zo_matmul_ref semantics,
+        cast back to the weight dtype like ``add_scaled_z`` so the f32 path
+        is bit-exact with the sequential strategies).
+        """
+        path, base, off = self._leaf(name)
+        if not is_perturbable(path) or \
+                not jnp.issubdtype(w.dtype, jnp.floating):
+            return x @ w
+        k, n = w.shape
+        if self.use_kernel and kernel_aligned(w.shape):
+            from repro.kernels import ops as kops  # lazy: pallas import
+            lead = x.shape[:-1]
+            y = kops.zo_matmul(x.reshape(-1, k), w, base, 0, self._coeff(),
+                               dist=self.dist, prime_offset=off,
+                               prehashed=True)
+            return y.reshape(*lead, n)
+        return x @ self.perturb(name, w)
+
+    def take(self, name: str, table, ids):
+        """take(table + coeff*z, ids, axis=0), perturbing only gathered rows."""
+        path, base, off = self._leaf(name)
+        rows = jnp.take(table, ids, axis=0)
+        if not is_perturbable(path) or \
+                not jnp.issubdtype(table.dtype, jnp.floating):
+            return rows
+        z = zrng.z_rows(base, ids, table.shape[1], jnp.float32, self.dist,
+                        prime_offset=off)
+        return (rows.astype(jnp.float32) + self._coeff() * z).astype(table.dtype)
+
+    def materialize(self, subtree: PyTree, name: str = "") -> PyTree:
+        """Perturb every leaf of a param subtree transiently.
+
+        Generic fallback for components without a fused path (MoE experts,
+        mamba/rwkv mixers, or -- scoped at the root -- a whole model).
+        Equivalent to ``add_scaled_z`` restricted to the subtree: one
+        transient copy of the subtree, no walk sweeps.
+        """
+        ctx = self.scope(name) if name else self
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(subtree)
+        out = [ctx.perturb(_path_str(p), leaf) for p, leaf in leaves]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sub(ctx: Optional[PerturbCtx], name: str) -> Optional[PerturbCtx]:
+    """ctx.scope(name), passing None through (unperturbed forward)."""
+    return None if ctx is None else ctx.scope(name)

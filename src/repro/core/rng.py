@@ -62,35 +62,72 @@ def fold_seed(seed, k):
     return avalanche(s ^ (jnp.asarray(k, _U32) * _U32(_DIM_PRIMES[1])))
 
 
-def _coord_hash(seed, salt: int, shape, offsets=None):
+def leaf_base(seed, salt: int):
+    """Pre-hashed starting state of a leaf's field: avalanche(seed ^ salt).
+
+    Passing it as ``base=`` to the field constructors (or ``prehashed=True``
+    to the Pallas kernels) skips the seed/salt fold, which lets callers fold
+    *leading* coordinates in first -- see :func:`fold_leading`.
+    """
+    return avalanche(jnp.asarray(seed, _U32) ^ _U32(salt))
+
+
+def fold_leading(base, idx, dim: int = 0):
+    """Advance a pre-hashed base past one leading coordinate.
+
+    For a stacked leaf of shape ``(L, *s)`` (e.g. scan-stacked per-layer
+    weights) the slice at layer ``l`` satisfies
+
+      z_field(seed, salt, (L, *s))[l]
+        == z_field(None, 0, s, base=fold_leading(leaf_base(seed, salt), l),
+                   prime_offset=1)
+
+    because :func:`_coord_hash` folds dimensions outermost-first. ``idx``
+    may be traced (a scan counter).
+    """
+    return avalanche(jnp.asarray(base, _U32)
+                     ^ (jnp.asarray(idx, _U32) * _U32(_DIM_PRIMES[dim])))
+
+
+def _coord_hash(seed, salt: int, shape, offsets=None, prime_offset: int = 0,
+                base=None):
     """uint32 hash field over an index grid of ``shape``.
 
     offsets: optional per-dim start indices (used by Pallas tiles so a tile
     at block (i, j) reproduces the same values as the full-array reference).
+    prime_offset: index of the per-dimension prime used for dim 0 -- a slice
+    of a higher-rank leaf keeps its original dims' primes this way.
+    base: optional pre-hashed state (see :func:`leaf_base`); seed/salt are
+    ignored when given.
     """
-    if len(shape) > len(_DIM_PRIMES):
-        raise ValueError(f"leaf rank {len(shape)} > {len(_DIM_PRIMES)} unsupported")
-    h = avalanche(jnp.asarray(seed, _U32) ^ _U32(salt))
+    if len(shape) + prime_offset > len(_DIM_PRIMES):
+        raise ValueError(
+            f"leaf rank {len(shape)} + offset {prime_offset} > "
+            f"{len(_DIM_PRIMES)} unsupported")
+    if base is None:
+        h = leaf_base(seed, salt)
+    else:
+        h = jnp.asarray(base, _U32)
     if len(shape) == 0:
-        return avalanche(h)
+        # a true scalar leaf gets one extra avalanche; a rank-0 *slice*
+        # (prime_offset > 0, base pre-folded past the leading dims) must
+        # not -- fold_leading already avalanched, and the full-field
+        # reference applies no further mixing to that element
+        return avalanche(h) if prime_offset == 0 else h
     for d, n in enumerate(shape):
         iota = jax.lax.broadcasted_iota(_U32, shape, d)
         if offsets is not None:
             iota = iota + jnp.asarray(offsets[d], _U32)
-        h = avalanche(h ^ (iota * _U32(_DIM_PRIMES[d % len(_DIM_PRIMES)])))
+        h = avalanche(h ^ (iota * _U32(_DIM_PRIMES[prime_offset + d])))
     return h
 
 
-def rademacher_field(seed, salt: int, shape, dtype=jnp.float32, offsets=None):
-    """±1 field, one hash per element (default ZO perturbation)."""
-    bits = _coord_hash(seed, salt, shape, offsets)
+def _bits_rademacher(bits, dtype):
     sign = 1.0 - 2.0 * (bits >> 31).astype(jnp.float32)
     return sign.astype(dtype)
 
 
-def gaussian_field(seed, salt: int, shape, dtype=jnp.float32, offsets=None):
-    """N(0,1) field via Box-Muller on two decorrelated hash fields."""
-    h1 = _coord_hash(seed, salt, shape, offsets)
+def _bits_gaussian(h1, dtype):
     h2 = avalanche(h1 ^ _U32(0x68E31DA4))
     # uniforms in (0, 1]: use top 24 bits, add 1 ulp to avoid log(0)
     u1 = ((h1 >> 8).astype(jnp.float32) + 1.0) * (1.0 / 16777216.0)
@@ -100,10 +137,46 @@ def gaussian_field(seed, salt: int, shape, dtype=jnp.float32, offsets=None):
     return (r * jnp.cos(theta)).astype(dtype)
 
 
+def rademacher_field(seed, salt: int, shape, dtype=jnp.float32, offsets=None,
+                     prime_offset: int = 0, base=None):
+    """±1 field, one hash per element (default ZO perturbation)."""
+    bits = _coord_hash(seed, salt, shape, offsets, prime_offset, base)
+    return _bits_rademacher(bits, dtype)
+
+
+def gaussian_field(seed, salt: int, shape, dtype=jnp.float32, offsets=None,
+                   prime_offset: int = 0, base=None):
+    """N(0,1) field via Box-Muller on two decorrelated hash fields."""
+    h1 = _coord_hash(seed, salt, shape, offsets, prime_offset, base)
+    return _bits_gaussian(h1, dtype)
+
+
 def z_field(seed, salt: int, shape, dtype=jnp.float32, dist: str = "rademacher",
-            offsets=None):
+            offsets=None, prime_offset: int = 0, base=None):
     if dist == "rademacher":
-        return rademacher_field(seed, salt, shape, dtype, offsets)
+        return rademacher_field(seed, salt, shape, dtype, offsets,
+                                prime_offset, base)
     if dist == "gaussian":
-        return gaussian_field(seed, salt, shape, dtype, offsets)
+        return gaussian_field(seed, salt, shape, dtype, offsets,
+                              prime_offset, base)
+    raise ValueError(f"unknown zo distribution: {dist}")
+
+
+def z_rows(base, row_ids, n_cols: int, dtype=jnp.float32,
+           dist: str = "rademacher", prime_offset: int = 0):
+    """z rows of a ``(R, n_cols)`` leaf gathered at ``row_ids``.
+
+    Equivalent to ``z_field(..., (R, n_cols))[row_ids]`` element-for-element
+    but never materializes the full table -- this keeps an embedding-table
+    perturbation O(tokens * d) instead of O(vocab * d). ``row_ids`` may have
+    any shape; the result appends a trailing ``n_cols`` axis.
+    """
+    h = avalanche(jnp.asarray(base, _U32)
+                  ^ (jnp.asarray(row_ids, _U32) * _U32(_DIM_PRIMES[prime_offset])))
+    ci = jax.lax.broadcasted_iota(_U32, h.shape + (n_cols,), h.ndim)
+    h = avalanche(h[..., None] ^ (ci * _U32(_DIM_PRIMES[prime_offset + 1])))
+    if dist == "rademacher":
+        return _bits_rademacher(h, dtype)
+    if dist == "gaussian":
+        return _bits_gaussian(h, dtype)
     raise ValueError(f"unknown zo distribution: {dist}")

@@ -15,12 +15,15 @@ _INTERPRET = jax.default_backend() != "tpu"
 
 
 def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
-           block=(256, 256)):
+           block=(256, 256), prime_offset: int = 0, prehashed: bool = False):
     return _k.zo_add(w, seed, salt, coeff, dist=dist, block=block,
-                     interpret=_INTERPRET)
+                     interpret=_INTERPRET, prime_offset=prime_offset,
+                     prehashed=prehashed)
 
 
 def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
-              blocks=(128, 128, 128)):
+              blocks=(128, 128, 128), prime_offset: int = 0,
+              prehashed: bool = False):
     return _k.zo_matmul(x, w, seed, salt, coeff, dist=dist, blocks=blocks,
-                        interpret=_INTERPRET)
+                        interpret=_INTERPRET, prime_offset=prime_offset,
+                        prehashed=prehashed)

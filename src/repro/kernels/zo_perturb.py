@@ -33,7 +33,7 @@ _U32 = jnp.uint32
 
 # keep in sync with repro.core.rng (duplicated to keep the kernel module
 # importable without touching jax device state through core's __init__)
-_DIM_PRIMES = (0x9E3779B1, 0x85EBCA77)
+_DIM_PRIMES = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D)
 
 
 def _avalanche(x):
@@ -45,13 +45,21 @@ def _avalanche(x):
     return x
 
 
-def _tile_z(seed, salt, shape, row0, col0, dist: str):
-    """z tile of ``shape`` at absolute offset (row0, col0), f32."""
-    h = _avalanche(jnp.asarray(seed, _U32) ^ _U32(salt))
+def _tile_z(seed, salt, shape, row0, col0, dist: str,
+            prime_offset: int = 0, prehashed: bool = False):
+    """z tile of ``shape`` at absolute offset (row0, col0), f32.
+
+    prehashed: ``seed`` is already ``avalanche(step_seed ^ salt)`` (plus any
+    leading-coordinate folds -- core.rng.leaf_base / fold_leading), letting a
+    2-D kernel tile reproduce the field of a slice of a stacked (L, m, n)
+    leaf. prime_offset selects the per-dimension primes accordingly.
+    """
+    h = jnp.asarray(seed, _U32) if prehashed \
+        else _avalanche(jnp.asarray(seed, _U32) ^ _U32(salt))
     ri = jax.lax.broadcasted_iota(_U32, shape, 0) + jnp.asarray(row0, _U32)
     ci = jax.lax.broadcasted_iota(_U32, shape, 1) + jnp.asarray(col0, _U32)
-    h = _avalanche(h ^ (ri * _U32(_DIM_PRIMES[0])))
-    h = _avalanche(h ^ (ci * _U32(_DIM_PRIMES[1])))
+    h = _avalanche(h ^ (ri * _U32(_DIM_PRIMES[prime_offset])))
+    h = _avalanche(h ^ (ci * _U32(_DIM_PRIMES[prime_offset + 1])))
     if dist == "rademacher":
         return 1.0 - 2.0 * (h >> 31).astype(jnp.float32)
     # gaussian (Box-Muller)
@@ -73,17 +81,21 @@ def _pick(dim: int, want: int) -> int:
     return b
 
 
-def _zo_add_kernel(seed_ref, coeff_ref, w_ref, o_ref, *, salt, bm, bn, dist):
+def _zo_add_kernel(seed_ref, coeff_ref, w_ref, o_ref, *, salt, bm, bn, dist,
+                   prime_offset, prehashed):
     i, j = pl.program_id(0), pl.program_id(1)
-    z = _tile_z(seed_ref[0], salt, (bm, bn), i * bm, j * bn, dist)
+    z = _tile_z(seed_ref[0], salt, (bm, bn), i * bm, j * bn, dist,
+                prime_offset, prehashed)
     w = w_ref[...].astype(jnp.float32)
     o_ref[...] = (w + coeff_ref[0] * z).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("salt", "dist", "block", "interpret"))
+                   static_argnames=("salt", "dist", "block", "interpret",
+                                    "prime_offset", "prehashed"))
 def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
-           block=(256, 256), interpret: bool = False):
+           block=(256, 256), interpret: bool = False,
+           prime_offset: int = 0, prehashed: bool = False):
     """W + coeff*z for a 2-D leaf; z regenerated in VMEM, never in HBM."""
     m, n = w.shape
     bm, bn = _pick(m, block[0]), _pick(n, block[1])
@@ -91,7 +103,8 @@ def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
     seed = jnp.asarray(seed, _U32).reshape(1)
     coeff = jnp.asarray(coeff, jnp.float32).reshape(1)
     return pl.pallas_call(
-        functools.partial(_zo_add_kernel, salt=salt, bm=bm, bn=bn, dist=dist),
+        functools.partial(_zo_add_kernel, salt=salt, bm=bm, bn=bn, dist=dist,
+                          prime_offset=prime_offset, prehashed=prehashed),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # seed
@@ -109,7 +122,7 @@ def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
 
 
 def _zo_matmul_kernel(seed_ref, coeff_ref, x_ref, w_ref, o_ref, acc_ref, *,
-                      salt, bk, bn, n_k, dist):
+                      salt, bk, bn, n_k, dist, prime_offset, prehashed):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -117,7 +130,8 @@ def _zo_matmul_kernel(seed_ref, coeff_ref, x_ref, w_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     j = pl.program_id(1)
-    z = _tile_z(seed_ref[0], salt, (bk, bn), k * bk, j * bn, dist)
+    z = _tile_z(seed_ref[0], salt, (bk, bn), k * bk, j * bn, dist,
+                prime_offset, prehashed)
     w = w_ref[...].astype(jnp.float32) + coeff_ref[0] * z
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
@@ -128,13 +142,19 @@ def _zo_matmul_kernel(seed_ref, coeff_ref, x_ref, w_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("salt", "dist", "blocks", "interpret"))
+                   static_argnames=("salt", "dist", "blocks", "interpret",
+                                    "prime_offset", "prehashed"))
 def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
-              blocks=(128, 128, 128), interpret: bool = False):
+              blocks=(128, 128, 128), interpret: bool = False,
+              prime_offset: int = 0, prehashed: bool = False):
     """Y = X @ (W + coeff * z(seed)). X: (M, K), W: (K, N).
 
     The perturbed weight tile lives only in VMEM: HBM traffic is exactly
     the unperturbed matmul's (X, W read once; Y written once).
+
+    prehashed/prime_offset: see :func:`_tile_z` -- lets the kernel compute
+    the perturbed forward for one layer-slice of a scan-stacked (L, K, N)
+    leaf while staying bit-exact with the full-leaf reference field.
     """
     m, k = x.shape
     k2, n = w.shape
@@ -144,7 +164,8 @@ def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
     seed = jnp.asarray(seed, _U32).reshape(1)
     coeff = jnp.asarray(coeff, jnp.float32).reshape(1)
     kern = functools.partial(_zo_matmul_kernel, salt=salt, bk=bk, bn=bn,
-                             n_k=grid[2], dist=dist)
+                             n_k=grid[2], dist=dist,
+                             prime_offset=prime_offset, prehashed=prehashed)
     return pl.pallas_call(
         kern,
         grid=grid,

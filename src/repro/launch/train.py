@@ -58,7 +58,8 @@ def make_trainer(args) -> Trainer:
     tcfg = TrainerConfig(
         optimizer=args.optimizer,
         mezo=MezoConfig(eps=args.eps, lr=args.lr,
-                        n_directions=args.directions, dist=args.zo_dist),
+                        n_directions=args.directions, dist=args.zo_dist,
+                        use_kernel=args.use_kernel),
         adam=AdamConfig(lr=args.adam_lr),
         n_steps=args.steps, seed=args.seed, ckpt_dir=args.ckpt_dir,
         snapshot_every=args.snapshot_every, log_every=args.log_every,
@@ -72,7 +73,7 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized config of the same family")
     ap.add_argument("--optimizer", default="mezo",
-                    choices=["mezo", "mezo-parallel", "adam"])
+                    choices=["mezo", "mezo-parallel", "mezo-fused", "adam"])
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -82,6 +83,11 @@ def main():
     ap.add_argument("--directions", type=int, default=1)
     ap.add_argument("--zo-dist", default="rademacher",
                     choices=["rademacher", "gaussian"])
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route MXU-aligned leaves/projections through the "
+                         "Pallas ZO kernels (zo_add, and zo_matmul for "
+                         "mezo-fused). TPU-oriented: on CPU the kernels run "
+                         "in slow interpret mode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--snapshot-every", type=int, default=100)

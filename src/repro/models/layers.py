@@ -4,6 +4,12 @@ Conventions:
   * params are plain nested dicts of jnp arrays,
   * activations flow in the param dtype (bf16 on TPU), softmax/norm math
     in f32,
+  * every parameterized apply-fn takes an optional ``ctx``
+    (:class:`repro.core.perturb_ctx.PerturbCtx`, scoped to its param
+    sub-dict). ``ctx=None`` is the plain forward; with a ctx, dense
+    weights compute X @ (W + coeff*z) through the fused ZO kernel and all
+    other leaves add a transient coeff*z -- the perturbed forward of the
+    fused MeZO step, bit-compatible with perturbing the param tree,
   * attention is memory-efficient: for long sequences the query axis is
     processed in chunks under ``lax.scan`` so the (S, T) score tensor is
     never materialized in full (prefill_32k / train_4k would otherwise
@@ -16,6 +22,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.perturb_ctx import sub as _sub
 
 # ---------------------------------------------------------------------------
 # norms
@@ -42,7 +50,9 @@ def norm_init(cfg, key):
     return {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
 
 
-def norm_apply(cfg, p, x):
+def norm_apply(cfg, p, x, ctx=None):
+    if ctx is not None:
+        p = {k: ctx.perturb(k, v) for k, v in p.items()}
     if cfg.norm == "layernorm":
         return layernorm(x, p["scale"], p["bias"])
     return rmsnorm(x, p["scale"])
@@ -91,10 +101,10 @@ def dense_init(key, d_in, d_out, dtype, scale=0.02, bias=False):
     return p
 
 
-def dense(p, x):
-    y = x @ p["w"]
+def dense(p, x, ctx=None):
+    y = x @ p["w"] if ctx is None else ctx.matmul(x, p["w"], "w")
     if "b" in p:
-        y = y + p["b"]
+        y = y + (p["b"] if ctx is None else ctx.perturb("b", p["b"]))
     return y
 
 
@@ -172,22 +182,25 @@ def attn_init(cfg, key, d_model=None):
     return p
 
 
-def attn_project_qkv(cfg, p, x):
+def attn_project_qkv(cfg, p, x, ctx=None):
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
-    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
-    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    q = dense(p["wq"], x, _sub(ctx, "wq")).reshape(b, s, cfg.n_heads, hd)
+    k = dense(p["wk"], x, _sub(ctx, "wk")).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x, _sub(ctx, "wv")).reshape(b, s, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
-        q = rmsnorm(q, p["q_norm"])
-        k = rmsnorm(k, p["k_norm"])
+        qn = p["q_norm"] if ctx is None else ctx.perturb("q_norm", p["q_norm"])
+        kn = p["k_norm"] if ctx is None else ctx.perturb("k_norm", p["k_norm"])
+        q = rmsnorm(q, qn)
+        k = rmsnorm(k, kn)
     return q, k, v
 
 
-def attn_apply(cfg, p, x, *, positions=None, kv_mask=None, causal=None):
+def attn_apply(cfg, p, x, *, positions=None, kv_mask=None, causal=None,
+               ctx=None):
     """Self-attention over x: (B, S, D). positions: (B, S) or None."""
     b, s, _ = x.shape
-    q, k, v = attn_project_qkv(cfg, p, x)
+    q, k, v = attn_project_qkv(cfg, p, x, ctx)
     if cfg.pos == "rope":
         pos = positions if positions is not None else jnp.arange(s)[None]
         cs = rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_pct,
@@ -202,7 +215,7 @@ def attn_apply(cfg, p, x, *, positions=None, kv_mask=None, causal=None):
     else:
         out = attention(q, k, v, causal=causal, kv_mask=kv_mask,
                         chunk=cfg.attn_chunk)
-    return dense(p["wo"], out.reshape(b, s, -1))
+    return dense(p["wo"], out.reshape(b, s, -1), _sub(ctx, "wo"))
 
 
 def cross_attn_apply(cfg, p, x, enc_kv):
@@ -248,16 +261,20 @@ def mlp_init(cfg, key, d_ff=None, d_model=None):
     }
 
 
-def mlp_apply(cfg, p, x):
+def mlp_apply(cfg, p, x, ctx=None):
     if cfg.act in ("swiglu", "geglu"):
-        h = jnp.einsum("...d,dfg->...fg", x, p["w_in"]["w"])
+        # gated w_in is an interleaved (D, F, 2) leaf: its z-field spans 3
+        # dims, so the 2-D fused kernel doesn't apply -- transient perturb
+        w_in = p["w_in"]["w"] if ctx is None else \
+            ctx.perturb("w_in/w", p["w_in"]["w"])
+        h = jnp.einsum("...d,dfg->...fg", x, w_in)
         u, g = h[..., 0], h[..., 1]
         gate = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
         h = u * gate
     else:
-        h = dense(p["w_in"], x)
+        h = dense(p["w_in"], x, _sub(ctx, "w_in"))
         h = jax.nn.gelu(h) if cfg.act == "gelu" else jax.nn.relu(h)
-    return dense(p["w_out"], h)
+    return dense(p["w_out"], h, _sub(ctx, "w_out"))
 
 
 # ---------------------------------------------------------------------------
@@ -274,16 +291,29 @@ def embed_init(cfg, key):
     return e
 
 
-def embed_apply(cfg, p, tokens, positions=None):
-    x = jnp.take(p["tok"], tokens, axis=0)
+def embed_apply(cfg, p, tokens, positions=None, ctx=None):
+    """ctx (scoped to "embed") perturbs only the gathered rows: O(S*D)
+    transient z, never the (V, D) table."""
+    if ctx is None:
+        x = jnp.take(p["tok"], tokens, axis=0)
+    else:
+        x = ctx.take("tok", p["tok"], tokens)
     if cfg.pos == "learned":
         pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
-        x = x + jnp.take(p["pos"], pos, axis=0)
+        if ctx is None:
+            x = x + jnp.take(p["pos"], pos, axis=0)
+        else:
+            x = x + ctx.take("pos", p["pos"], pos)
     return x
 
 
-def unembed(cfg, embed_p, head_p, x):
-    """Final projection to vocab logits (tied or untied)."""
+def unembed(cfg, embed_p, head_p, x, ctx=None):
+    """Final projection to vocab logits (tied or untied). ctx is scoped to
+    the param-tree ROOT here (the two branches touch different leaves)."""
     if cfg.tie_embeddings or head_p is None:
-        return x @ embed_p["tok"].T
-    return dense(head_p, x)
+        if ctx is None:
+            return x @ embed_p["tok"].T
+        # tied head reads the embedding transposed; the row-major z-field
+        # doesn't transpose into kernel tiles, so perturb transiently
+        return x @ ctx.scope("embed").perturb("tok", embed_p["tok"]).T
+    return dense(head_p, x, _sub(ctx, "lm_head"))

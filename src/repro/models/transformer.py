@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core.perturb_ctx import sub as _sub
 from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import moe as MoE
@@ -56,15 +57,20 @@ def _lm_block_init(cfg, key):
     return p
 
 
-def _lm_block_apply(cfg, p, x, *, positions, kv_mask=None):
-    x = x + L.attn_apply(cfg, p["attn"], L.norm_apply(cfg, p["ln_attn"], x),
-                         positions=positions, kv_mask=kv_mask)
-    h = L.norm_apply(cfg, p["ln_ffn"], x)
+def _lm_block_apply(cfg, p, x, *, positions, kv_mask=None, ctx=None):
+    x = x + L.attn_apply(cfg, p["attn"],
+                         L.norm_apply(cfg, p["ln_attn"], x,
+                                      _sub(ctx, "ln_attn")),
+                         positions=positions, kv_mask=kv_mask,
+                         ctx=_sub(ctx, "attn"))
+    h = L.norm_apply(cfg, p["ln_ffn"], x, _sub(ctx, "ln_ffn"))
     if cfg.n_experts:
         fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-        y, aux = fn(cfg, p["moe"], h)
+        moe_p = p["moe"] if ctx is None else ctx.materialize(p["moe"], "moe")
+        y, aux = fn(cfg, moe_p, h)
     else:
-        y, aux = L.mlp_apply(cfg, p["mlp"], h), jnp.float32(0.0)
+        y, aux = L.mlp_apply(cfg, p["mlp"], h, _sub(ctx, "mlp")), \
+            jnp.float32(0.0)
     return x + y, aux
 
 
@@ -82,32 +88,41 @@ def _lm_init(cfg, key):
     return p
 
 
-def _lm_backbone(cfg, params, x, positions, kv_mask=None):
-    def body(carry, bp):
+def _lm_backbone(cfg, params, x, positions, kv_mask=None, ctx=None):
+    def body(carry, xs):
+        bp, li = xs
         h, aux = carry
+        # block leaves are scan-stacked (L, ...): the perturb ctx binds the
+        # layer index so per-layer z slices match the stacked leaf's field
+        bctx = None if ctx is None else ctx.scope("blocks").at_layer(li)
         h, a = _lm_block_apply(cfg, bp, h, positions=positions,
-                               kv_mask=kv_mask)
+                               kv_mask=kv_mask, ctx=bctx)
         return (h, aux + a), None
 
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
-    return L.norm_apply(cfg, params["ln_f"], x), aux
+    n_layers = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)),
+        (params["blocks"], jnp.arange(n_layers, dtype=jnp.uint32)))
+    return L.norm_apply(cfg, params["ln_f"], x, _sub(ctx, "ln_f")), aux
 
 
-def _lm_forward(cfg, params, batch, last_only=False):
+def _lm_forward(cfg, params, batch, last_only=False, perturb=None):
     tokens = batch["tokens"]
-    x = L.embed_apply(cfg, params["embed"], tokens)
+    x = L.embed_apply(cfg, params["embed"], tokens,
+                      ctx=_sub(perturb, "embed"))
     n_prefix = 0
     if "patch_embeds" in batch:                    # vlm: prepend stub patches
         x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
         n_prefix = batch["patch_embeds"].shape[1]
     positions = jnp.arange(x.shape[1])[None]
     kv_mask = batch.get("attn_mask")
-    x, aux = _lm_backbone(cfg, params, x, positions, kv_mask)
+    x, aux = _lm_backbone(cfg, params, x, positions, kv_mask, ctx=perturb)
     if n_prefix:
         x = x[:, n_prefix:]
     if last_only:          # prefill: only the next-token logits are needed
         x = x[:, -1:]
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x,
+                       ctx=perturb)
     return logits, aux
 
 
@@ -137,23 +152,33 @@ def softmax_xent(logits, targets, mask=None):
     return jnp.mean(nll)
 
 
-def _lm_loss(cfg, params, batch):
+def _lm_loss(cfg, params, batch, perturb=None):
+    """The ZO objective. ``perturb`` (a PerturbCtx) switches on the fused
+    perturbed forward: params stay untouched, every weight use applies
+    coeff*z in place (see core/perturb_ctx.py)."""
     if cfg.n_classes:                                 # roberta/SST-2 path
-        logits, aux = _cls_forward(cfg, params, batch)
+        logits, aux = _cls_forward(cfg, params, batch, perturb=perturb)
         return softmax_xent(logits, batch["label"])
-    logits, aux = _lm_forward(cfg, params, batch)
+    logits, aux = _lm_forward(cfg, params, batch, perturb=perturb)
     ce = softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
     return ce + AUX_LOSS_WEIGHT * aux
 
 
-def _cls_forward(cfg, params, batch):
-    """Encoder classification (roberta): CLS pooling + head."""
+def _cls_forward(cfg, params, batch, last_only=False, perturb=None):
+    """Encoder classification (roberta): CLS pooling + head.
+
+    last_only is accepted for signature parity with the other family
+    forwards (launch/dryrun calls model.forward(..., last_only=True)
+    generically) and ignored: CLS logits have no sequence axis."""
     tokens = batch["tokens"]
-    x = L.embed_apply(cfg, params["embed"], tokens)
+    x = L.embed_apply(cfg, params["embed"], tokens,
+                      ctx=_sub(perturb, "embed"))
     positions = jnp.arange(x.shape[1])[None]
-    x, _ = _lm_backbone(cfg, params, x, positions, batch.get("attn_mask"))
+    x, _ = _lm_backbone(cfg, params, x, positions, batch.get("attn_mask"),
+                        ctx=perturb)
     cls = x[:, 0].astype(jnp.float32)
-    return L.dense(params["cls_head"], jnp.tanh(cls)), jnp.float32(0.0)
+    return L.dense(params["cls_head"], jnp.tanh(cls),
+                   _sub(perturb, "cls_head")), jnp.float32(0.0)
 
 
 def _lm_init_cache(cfg, bsz, max_len, dtype):
@@ -274,7 +299,11 @@ def _hybrid_forward(cfg, params, batch, last_only=False):
     return L.unembed(cfg, params["embed"], params.get("lm_head"), x), aux
 
 
-def _hybrid_loss(cfg, params, batch):
+def _hybrid_loss(cfg, params, batch, perturb=None):
+    # no fused forward wired for mamba mixers yet: one transient perturbed
+    # copy (the vmapdir memory profile), still zero walk sweeps
+    if perturb is not None:
+        params = perturb.materialize(params)
     logits, aux = _hybrid_forward(cfg, params, batch)
     return softmax_xent(logits, batch["targets"], batch.get("loss_mask")) \
         + AUX_LOSS_WEIGHT * aux
@@ -367,7 +396,9 @@ def _rwkv_forward(cfg, params, batch, last_only=False):
         jnp.float32(0.0)
 
 
-def _rwkv_loss(cfg, params, batch):
+def _rwkv_loss(cfg, params, batch, perturb=None):
+    if perturb is not None:           # transient copy; see _hybrid_loss
+        params = perturb.materialize(params)
     logits, _ = _rwkv_forward(cfg, params, batch)
     return softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
 
@@ -475,7 +506,9 @@ def _encdec_forward(cfg, params, batch, last_only=False):
     return x @ params["embed"]["tok"].T, jnp.float32(0.0)   # whisper ties
 
 
-def _encdec_loss(cfg, params, batch):
+def _encdec_loss(cfg, params, batch, perturb=None):
+    if perturb is not None:           # transient copy; see _hybrid_loss
+        params = perturb.materialize(params)
     logits, _ = _encdec_forward(cfg, params, batch)
     return softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
 

@@ -144,8 +144,12 @@ class HloModule:
         rn = 1
         for d in rdims[0][1]:
             rn *= d
-        # contracted dims from lhs operand shape
-        mo = re.search(r"dot\(%?([\w.\-]+)", line)
+        # lhs operand name across HLO printer dialects: "dot(%a, ...)",
+        # "dot(f32[2,8]{1,0} %a, ...)", sigil-less "dot(Arg_0.1, ...)",
+        # and TPU layouts with tiling "dot(f32[8,4]{1,0:T(8,128)} %a, ...)"
+        # -- skip an optional leading type token, then an optional '%'
+        mo = re.search(
+            r"dot\((?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%?([\w.\-]+)", line)
         mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
         if not mo or not mc:
             return 2.0 * rn  # degenerate

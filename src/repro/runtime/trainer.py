@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import rng as zrng
-from repro.core.mezo import MezoConfig, mezo_step, mezo_step_vmapdir
+from repro.core.mezo import (MezoConfig, mezo_step, mezo_step_fused,
+                             mezo_step_vmapdir)
 from repro.models import build_model
 from repro.models.config import ModelConfig
 from repro.optim.adam import AdamConfig, adam_init, grad_train_step
@@ -30,7 +31,7 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class TrainerConfig:
-    optimizer: str = "mezo"          # mezo | mezo-parallel | adam
+    optimizer: str = "mezo"          # mezo | mezo-parallel | mezo-fused | adam
     mezo: MezoConfig = MezoConfig()
     adam: AdamConfig = AdamConfig()
     n_steps: int = 100
@@ -95,6 +96,7 @@ class Trainer:
 
         mcfg = self._mezo_cfg()
         step_fn = {"mezo": mezo_step, "mezo-parallel": mezo_step_vmapdir,
+                   "mezo-fused": mezo_step_fused,
                    "adam": None}[self.tcfg.optimizer]
 
         t0 = time.perf_counter()

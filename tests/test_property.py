@@ -3,7 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dep (pip install -e .[test]); tier-1 runs without")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import rng as zrng
 from repro.core.mezo import _direction_coeffs
