@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import (MezoConfig, mezo_step, mezo_step_fused,
+from repro.core import (MezoConfig, get_strategy, mezo_step, mezo_step_fused,
                         mezo_step_vmapdir)
 from repro.data.synthetic import lm_batch_at, synthetic_lm_corpus
 from repro.models import build_model
@@ -120,6 +120,36 @@ def run(out_dir="experiments/bench"):
         rows.append((f"table2/mezo_vmapdir/K{k}", us,
                      "directions evaluated concurrently"))
         table[f"mezo_vmapdir/K{k}"] = us
+
+    # chunked multi-step scan: the engine's run_chunk folds CHUNK steps
+    # into one lax.scan dispatch, amortizing per-step launch overhead
+    # (seed derivation inside the scan matches the Trainer's, so the
+    # replay log of a chunked run is interchangeable with a stepwise one)
+    bs, chunk = 8, 8
+    ccfg = MezoConfig(eps=1e-3, lr=1e-5, n_directions=bs_k)
+    strat = get_strategy("mezo")
+    cstate = {"s": strat.init_state(jax.tree.map(jnp.copy, params0), ccfg)}
+
+    def stacked_batches(t):
+        bl = [lm_batch_at(t * chunk + i, bs, 32, cfg.vocab, stream)
+              for i in range(chunk)]
+        return {k: jnp.stack([jnp.asarray(b[k]) for b in bl])
+                for k in bl[0]}
+
+    def chunk_fn(t):
+        cstate["s"], _ = strat.run_chunk(model.loss, cstate["s"],
+                                         stacked_batches(t), jnp.uint32(0),
+                                         ccfg)
+        jax.block_until_ready(jax.tree.leaves(cstate["s"].params)[0])
+
+    us_per_step = _time_steps(chunk_fn, n=3) / chunk
+    sps = 1e6 / us_per_step
+    rows.append((f"table2/mezo_chunked/bs{bs}", us_per_step,
+                 f"{chunk}-step lax.scan chunk; {sps:.1f} steps/s "
+                 f"(vs {1e6 / table[f'mezo/bs{bs}']:.1f} steps/s stepwise)"))
+    table[f"mezo_chunked/bs{bs}"] = us_per_step
+    table["chunked"] = {"chunk_steps": chunk, "steps_per_sec": sps,
+                        "stepwise_steps_per_sec": 1e6 / table[f"mezo/bs{bs}"]}
 
     # K of the bs arms above (counts scale linearly in K)
     table["param_sweeps_per_step"] = {

@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core import MezoConfig, mezo_step_vmapdir
+from repro.core import MezoConfig, get_strategy, mezo_step_vmapdir
 from repro.data.synthetic import lm_batch_at, synthetic_lm_corpus
 from repro.models import build_model, sharding as shd
 from repro.roofline.hlo import collective_bytes
@@ -56,8 +56,9 @@ def main():
 
     set_mesh = getattr(jax, "set_mesh", None)
     with (set_mesh(mesh) if set_mesh else contextlib.nullcontext()):
-        lowered = mezo_step_vmapdir.lower(model.loss, params, batch,
-                                          jnp.uint32(0), mcfg, None)
+        strat = get_strategy("mezo-parallel")
+        lowered = strat.lower(model.loss, strat.init_state(params, mcfg),
+                              batch, jnp.uint32(0), mcfg, None)
         hlo = lowered.compile().as_text()
         coll = collective_bytes(hlo)
         p2, aux = mezo_step_vmapdir(model.loss, params, batch,

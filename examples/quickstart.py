@@ -26,15 +26,15 @@ def state_bytes(tree):
 
 
 def main():
-    cfg = get_config("opt-1.3b").reduced(n_layers=2, d_model=128, d_ff=256,
-                                         vocab=512)
-    steps, batch, seq = 60, 8, 32
+    cfg = get_config("opt-1.3b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                         vocab=128)
+    steps, batch, seq = 100, 8, 32
 
     runs = {}
     for opt in ("mezo", "adam"):
         tc = TrainerConfig(
             optimizer=opt,
-            mezo=MezoConfig(eps=1e-2, lr=5e-3, n_directions=4),
+            mezo=MezoConfig(eps=1e-2, lr=1e-2, n_directions=8),
             adam=AdamConfig(lr=1e-3),
             n_steps=steps, log_every=20)
         tr = Trainer(cfg, tc, lm_batches(batch, seq, cfg.vocab, seed=1))
@@ -55,7 +55,10 @@ def main():
           f"no moments)")
     print(f"  adam: {a_bytes/1e6:.1f} MB (fp32 moments) + gradient buffer "
           f"+ activations for backprop")
-    assert runs["mezo"][-1] < runs["mezo"][0], "MeZO should descend"
+    import numpy as np
+    first = np.mean(runs["mezo"][:10])
+    last = np.mean(runs["mezo"][-10:])
+    assert last < first, "MeZO should descend"
 
 
 if __name__ == "__main__":

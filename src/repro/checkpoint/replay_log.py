@@ -36,10 +36,15 @@ class ReplayLog:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._f = open(path, "a", buffering=1)
 
-    def append(self, step: int, seed, gs, lr: float, eps: float):
+    def append(self, step: int, seed, gs, lr: float, eps: float,
+               mask=None):
+        """``mask``: the step's straggler direction_mask, recorded so
+        replay renormalizes over the same survivors the live update did."""
         rec = {"step": int(step), "seed": int(np.asarray(seed)),
                "gs": np.asarray(gs, np.float32).reshape(-1).tolist(),
                "lr": float(lr), "eps": float(eps)}
+        if mask is not None:
+            rec["mask"] = np.asarray(mask, np.float32).reshape(-1).tolist()
         self._f.write(json.dumps(rec) + "\n")
         if self.fsync:
             self._f.flush()
@@ -81,7 +86,10 @@ def replay_into(params, records: List[dict], cfg) -> Tuple[object, int]:
     last = -1
     for rec in records:
         c = dataclasses.replace(cfg, lr=rec["lr"], eps=rec["eps"])
+        mask = rec.get("mask")
         params = replay_update(params, np.uint32(rec["seed"]),
-                               np.asarray(rec["gs"], np.float32), c)
+                               np.asarray(rec["gs"], np.float32), c,
+                               direction_mask=(None if mask is None else
+                                               np.asarray(mask, np.float32)))
         last = rec["step"]
     return params, last

@@ -1,0 +1,508 @@
+"""Composable ZO engine: direction estimators × update rules.
+
+PocketLLM's memory claim rests on one invariant: a training step is fully
+described by the scalar pair ``(seed, gs)``. That makes the step function
+a *product* of two orthogonal choices —
+
+* a **DirectionEvaluator** realizes ``L(theta ± eps*z_k)`` for K
+  directions and returns the projected gradients ``gs``:
+
+  - ``walk``    — sequential in-place walk (perturb / eval /
+    counter-perturb / eval / restore), the paper-faithful memory profile;
+  - ``vmapdir`` — directions evaluated concurrently under ``vmap``
+    (one transient perturbed copy per direction, pod-shardable);
+  - ``fused``   — the perturbation never touches the parameters: a
+    :class:`~repro.core.perturb_ctx.PerturbCtx` with ``coeff=±eps`` rides
+    into the forward and dense projections compute ``X @ (W + coeff*z)``
+    via the Pallas ``zo_matmul`` kernel (0 param sweeps/direction);
+
+* an **UpdateRule** turns ``(seed, gs)`` into a parameter update:
+
+  - ``sgd``      — the shared f32 seed-replay tail
+    ``theta -= lr * sum_k coeffs_k * gs_k * z_k``;
+  - ``momentum`` — ZO momentum via *truncated seed replay*: classical
+    momentum needs a param-sized velocity buffer (exactly the memory MeZO
+    exists to avoid), but the ZO velocity is structurally
+    ``v_t = sum_i beta^{t-i} g_i z_i``, so a window of M
+    ``(seed, gs, coeffs)`` rows represents it in O(M*K) scalars and the
+    update replays the window with geometric weights.
+
+Every estimator×update combination shares the same f32 update arithmetic
+(:func:`_direction_coeffs` / :func:`_apply_direction_updates`), which is
+what keeps the ``(seed, gs)`` replay log interchangeable across
+strategies — bit-exact for the pristine-base-point estimators
+(``vmapdir``, ``fused``), and up to walk roundoff drift for ``walk``.
+
+The engine also owns:
+
+* :class:`TrainState` — the one pytree a step consumes and produces
+  (params, step counter, update-rule state). The checkpoint manager
+  snapshots/restores it whole, so momentum history and Adam moments
+  survive a crash (``checkpoint/manager.py``).
+* a name-based **strategy registry** (builder pattern): the trainer and
+  CLI resolve ``--estimator fused --update momentum`` (or a legacy alias
+  like ``"mezo-fused"``) through :func:`build_strategy` /
+  :func:`get_strategy` instead of a hand-written dict.
+* :meth:`ZOStrategy.run_chunk` — a multi-step ``lax.scan`` over a stacked
+  batch pytree that amortizes per-step dispatch overhead
+  (``benchmarks/table2_walltime.py``'s chunked arm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as zrng
+from repro.core.perturb import add_scaled_z
+from repro.core.perturb_ctx import PerturbCtx
+
+PyTree = Any
+# (params, batch) -> scalar; the fused estimator additionally requires a
+# ``perturb=`` keyword (models built by repro.models.build_model accept it)
+LossFn = Callable[..., jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# configs / aux / state
+
+
+@dataclasses.dataclass(frozen=True)
+class MezoConfig:
+    eps: float = 1e-3
+    lr: float = 1e-6
+    n_directions: int = 1          # K: SPSA directions averaged per step
+    dist: str = "rademacher"       # or "gaussian" (MeZO-repo default)
+    use_kernel: bool = False       # route 2-D leaves via Pallas zo_add
+    momentum: float = 0.0          # ZO momentum via truncated seed replay
+    momentum_window: int = 8       # directions of history to replay
+    weight_decay: float = 0.0
+
+
+@dataclasses.dataclass
+class MezoAux:
+    loss: jnp.ndarray         # mean of (l+ + l-)/2 over directions
+    gs: jnp.ndarray           # (K,) projected gradients -- the replay log
+    seed: jnp.ndarray         # uint32 step seed -- the replay log
+    grad_norm_est: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    MezoAux,
+    lambda a: ((a.loss, a.gs, a.seed, a.grad_norm_est), None),
+    lambda _, c: MezoAux(*c),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    """Everything a training step consumes and produces.
+
+    ``opt`` is the update rule's state: ``{}`` for sgd, the truncated
+    seed-replay window for momentum, or an ``optim.adam.AdamState`` for
+    the gradient baseline. Snapshotting this pytree whole (instead of bare
+    params) is what makes momentum history / Adam moments survive resume.
+    """
+    params: PyTree
+    step: jnp.ndarray              # uint32 scalar: completed-step count
+    opt: PyTree
+
+
+jax.tree_util.register_pytree_with_keys(
+    TrainState,
+    lambda s: (((jax.tree_util.DictKey("params"), s.params),
+                (jax.tree_util.DictKey("step"), s.step),
+                (jax.tree_util.DictKey("opt"), s.opt)), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+# ---------------------------------------------------------------------------
+# the shared f32 update tail (identical across every strategy — this is
+# what keeps the (seed, gs) replay log interchangeable)
+
+
+def _direction_coeffs(kk: int, lr, direction_mask):
+    """Per-direction update coefficients: ``-lr/K``, or with a straggler
+    mask ``-lr * m_k / max(sum(m), 1)`` — an unbiased mean over survivors."""
+    if direction_mask is None:
+        return jnp.full((kk,), -lr / kk, jnp.float32)
+    m = jnp.asarray(direction_mask, jnp.float32).reshape(kk)
+    return -lr * m / jnp.maximum(m.sum(), 1.0)
+
+
+def _apply_direction_updates(params, seed, gs, coeffs, cfg: MezoConfig):
+    """theta += sum_k coeffs[k] * gs[k] * z_k, z_k regenerated per k."""
+    k_tot = gs.shape[0]
+
+    def body(p, kg):
+        k, g, c = kg
+        return add_scaled_z(p, zrng.fold_seed(seed, k), c * g,
+                            dist=cfg.dist, use_kernel=cfg.use_kernel), None
+
+    params, _ = jax.lax.scan(
+        body, params, (jnp.arange(k_tot, dtype=jnp.uint32), gs, coeffs))
+    return params
+
+
+def _decay(params, wd_coeff):
+    if wd_coeff is None:
+        return params
+    return jax.tree.map(
+        lambda p: (p * (1.0 - wd_coeff)).astype(p.dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+# ---------------------------------------------------------------------------
+# direction evaluators
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectionEvaluator:
+    """How ``theta ± eps*z`` is realized for the 2K loss evaluations.
+
+    eval_fn: (loss_fn, params, batch, seed, cfg) -> (params, gs, ls).
+    ``params`` is threaded through because the in-place walk mutates (and
+    restores) it; pristine evaluators return it untouched.
+
+    pristine: the base point is never written during evaluation, so the
+    (seed, gs) replay log reconstructs the step bit-exactly.
+    donate: the step jit may donate the input TrainState's buffers.
+    """
+    name: str
+    eval_fn: Callable[..., Tuple[PyTree, jnp.ndarray, jnp.ndarray]]
+    pristine: bool
+    donate: bool
+
+
+def _eval_walk(loss_fn: LossFn, params: PyTree, batch: Any, seed,
+               cfg: MezoConfig):
+    """Sequential in-place walk: peak memory = params + one forward."""
+    eps = jnp.float32(cfg.eps)
+
+    def one_dir(p, k):
+        s = zrng.fold_seed(seed, k)
+        p = add_scaled_z(p, s, eps, dist=cfg.dist, use_kernel=cfg.use_kernel)
+        lp = loss_fn(p, batch)
+        p = add_scaled_z(p, s, -2.0 * eps, dist=cfg.dist,
+                         use_kernel=cfg.use_kernel)
+        lm = loss_fn(p, batch)
+        # restore to base point for the next direction
+        p = add_scaled_z(p, s, eps, dist=cfg.dist, use_kernel=cfg.use_kernel)
+        return p, ((lp - lm) / (2.0 * eps), 0.5 * (lp + lm))
+
+    params, (gs, ls) = jax.lax.scan(
+        one_dir, params, jnp.arange(cfg.n_directions, dtype=jnp.uint32))
+    return params, gs, ls
+
+
+def _eval_vmapdir(loss_fn: LossFn, params: PyTree, batch: Any, seed,
+                  cfg: MezoConfig):
+    """Direction-parallel evaluation: the K-way vmap axis is what the
+    launcher shards over the ``pod`` mesh axis; the only cross-pod
+    exchange is the (K,) vector ``gs``."""
+    eps = jnp.float32(cfg.eps)
+
+    def eval_dir(k):
+        s = zrng.fold_seed(seed, k)
+        lp = loss_fn(add_scaled_z(params, s, eps, dist=cfg.dist), batch)
+        lm = loss_fn(add_scaled_z(params, s, -eps, dist=cfg.dist), batch)
+        return (lp - lm) / (2.0 * eps), 0.5 * (lp + lm)
+
+    gs, ls = jax.vmap(eval_dir)(
+        jnp.arange(cfg.n_directions, dtype=jnp.uint32))
+    return params, gs, ls
+
+
+def _eval_fused(loss_fn: LossFn, params: PyTree, batch: Any, seed,
+                cfg: MezoConfig):
+    """Fused perturbed forward: 0 param sweeps per direction. ``loss_fn``
+    must accept a ``perturb=`` keyword; both sides of each direction see
+    the exact z-fields ``add_scaled_z`` would apply, so losses match
+    ``vmapdir`` bit-for-bit on the jnp path in f32."""
+    eps = jnp.float32(cfg.eps)
+
+    def one_dir(_, k):
+        s = zrng.fold_seed(seed, k)
+        ctx = PerturbCtx(seed=s, coeff=eps, dist=cfg.dist,
+                         use_kernel=cfg.use_kernel)
+        lp = loss_fn(params, batch, perturb=ctx)
+        lm = loss_fn(params, batch,
+                     perturb=dataclasses.replace(ctx, coeff=-eps))
+        return None, ((lp - lm) / (2.0 * eps), 0.5 * (lp + lm))
+
+    _, (gs, ls) = jax.lax.scan(one_dir, None,
+                               jnp.arange(cfg.n_directions, dtype=jnp.uint32))
+    return params, gs, ls
+
+
+# ---------------------------------------------------------------------------
+# update rules
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRule:
+    """How (seed, gs) becomes a parameter update.
+
+    init_fn:   cfg -> opt state pytree (shapes only depend on cfg).
+    update_fn: (params, opt, seed, gs, direction_mask, cfg)
+               -> (params, opt). Consumes only scalars beyond params —
+               this same function is the checkpoint manager's replay
+               primitive (zero forward passes on recovery).
+    """
+    name: str
+    init_fn: Callable[[MezoConfig], PyTree]
+    update_fn: Callable[..., Tuple[PyTree, PyTree]]
+
+
+def _sgd_init(cfg: MezoConfig) -> PyTree:
+    return {}
+
+
+def _sgd_update(params, opt, seed, gs, direction_mask, cfg: MezoConfig):
+    seed = jnp.asarray(seed, jnp.uint32)
+    gs = jnp.asarray(gs, jnp.float32).reshape(-1)
+    lr = jnp.float32(cfg.lr)
+    coeffs = _direction_coeffs(gs.shape[0], lr, direction_mask)
+    if cfg.weight_decay:
+        params = _decay(params, lr * cfg.weight_decay)
+    return _apply_direction_updates(params, seed, gs, coeffs, cfg), opt
+
+
+def momentum_history_init(cfg: MezoConfig) -> PyTree:
+    """Empty truncated-replay window: M rows of (seed, gs, coeffs).
+    Zero rows are exact no-ops (g=0 ⇒ 0*z added)."""
+    m, k = cfg.momentum_window, cfg.n_directions
+    return {"seeds": jnp.zeros((m,), jnp.uint32),
+            "gs": jnp.zeros((m, k), jnp.float32),
+            "coeffs": jnp.zeros((m, k), jnp.float32)}
+
+
+def _momentum_update(params, opt, seed, gs, direction_mask,
+                     cfg: MezoConfig):
+    """ZO momentum via truncated seed replay (paper Sec 6.2 asks for
+    faster derivative-free methods).
+
+    The window stores each step's own f32 coefficients (its lr and
+    straggler-mask renormalization), so replaying an entry reproduces
+    exactly the sgd update that step would have applied, scaled by the
+    geometric weight ``(1-beta) * beta^age``. Memory: M*(2K+1) scalars.
+    Compute: M extra z-regeneration sweeps per step (bandwidth-bound,
+    no forwards).
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    gs = jnp.asarray(gs, jnp.float32).reshape(-1)
+    lr = jnp.float32(cfg.lr)
+    kk = gs.shape[0]
+    beta = jnp.float32(cfg.momentum)
+    coeffs = _direction_coeffs(kk, lr, direction_mask)
+
+    # roll the window: newest last
+    seeds_h = jnp.concatenate([opt["seeds"][1:], seed[None]])
+    gs_h = jnp.concatenate([opt["gs"][1:], gs[None]])
+    cf_h = jnp.concatenate([opt["coeffs"][1:], coeffs[None]])
+
+    m = seeds_h.shape[0]
+    ages = jnp.arange(m - 1, -1, -1, dtype=jnp.float32)
+    weights = ((1.0 - beta) * beta ** ages if cfg.momentum
+               else jnp.where(ages == 0, 1.0, 0.0))
+
+    if cfg.weight_decay:
+        params = _decay(params, lr * cfg.weight_decay)
+
+    def entry(p, inp):
+        s_j, g_j, c_j, w_j = inp
+
+        def dir_body(pp, kgc):
+            k, g, c = kgc
+            return add_scaled_z(pp, zrng.fold_seed(s_j, k), w_j * c * g,
+                                dist=cfg.dist,
+                                use_kernel=cfg.use_kernel), None
+
+        p, _ = jax.lax.scan(
+            dir_body, p, (jnp.arange(kk, dtype=jnp.uint32), g_j, c_j))
+        return p, None
+
+    params, _ = jax.lax.scan(entry, params, (seeds_h, gs_h, cf_h, weights))
+    return params, {"seeds": seeds_h, "gs": gs_h, "coeffs": cf_h}
+
+
+# ---------------------------------------------------------------------------
+# the composed strategy
+
+
+def _step_body(strategy: "ZOStrategy", loss_fn: LossFn, state: TrainState,
+               batch: Any, seed, cfg: MezoConfig, direction_mask):
+    seed = jnp.asarray(seed, jnp.uint32)
+    params, gs, ls = strategy.estimator.eval_fn(
+        loss_fn, state.params, batch, seed, cfg)
+    params, opt = strategy.update.update_fn(
+        params, state.opt, seed, gs, direction_mask, cfg)
+    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
+                  grad_norm_est=jnp.abs(gs).mean())
+    return TrainState(params=params, step=state.step + jnp.uint32(1),
+                      opt=opt), aux
+
+
+@partial(jax.jit, static_argnames=("strategy", "loss_fn", "cfg"))
+def _jit_step(strategy, loss_fn, state, batch, seed, cfg,
+              direction_mask=None):
+    return _step_body(strategy, loss_fn, state, batch, seed, cfg,
+                      direction_mask)
+
+
+@partial(jax.jit, static_argnames=("strategy", "loss_fn", "cfg"),
+         donate_argnums=(2,))
+def _jit_step_donate(strategy, loss_fn, state, batch, seed, cfg,
+                     direction_mask=None):
+    return _step_body(strategy, loss_fn, state, batch, seed, cfg,
+                      direction_mask)
+
+
+@partial(jax.jit, static_argnames=("strategy", "loss_fn", "cfg"),
+         donate_argnums=(2,))
+def _jit_chunk(strategy, loss_fn, state, batches, base_seed, cfg):
+    base = jnp.asarray(base_seed, jnp.uint32)
+
+    def body(st, batch):
+        return _step_body(strategy, loss_fn, st, batch,
+                          zrng.fold_seed(base, st.step), cfg, None)
+
+    return jax.lax.scan(body, state, batches)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZOStrategy:
+    """One estimator×update pairing, jit-cached per (loss_fn, cfg)."""
+    estimator: DirectionEvaluator
+    update: UpdateRule
+
+    @property
+    def name(self) -> str:
+        return f"{self.estimator.name}+{self.update.name}"
+
+    def init_state(self, params: PyTree, cfg: MezoConfig,
+                   step: int = 0) -> TrainState:
+        return TrainState(params=params, step=jnp.uint32(step),
+                          opt=self.update.init_fn(cfg))
+
+    def step(self, loss_fn: LossFn, state: TrainState, batch: Any, seed,
+             cfg: MezoConfig, direction_mask=None
+             ) -> Tuple[TrainState, MezoAux]:
+        fn = _jit_step_donate if self.estimator.donate else _jit_step
+        return fn(self, loss_fn, state, batch,
+                  jnp.asarray(seed, jnp.uint32), cfg, direction_mask)
+
+    def lower(self, loss_fn: LossFn, state: TrainState, batch: Any, seed,
+              cfg: MezoConfig, direction_mask=None):
+        """AOT-lower one step (HLO inspection / cost analysis)."""
+        fn = _jit_step_donate if self.estimator.donate else _jit_step
+        return fn.lower(self, loss_fn, state, batch,
+                        jnp.asarray(seed, jnp.uint32), cfg, direction_mask)
+
+    def run_chunk(self, loss_fn: LossFn, state: TrainState, batches: Any,
+                  base_seed, cfg: MezoConfig
+                  ) -> Tuple[TrainState, MezoAux]:
+        """Run N steps in one ``lax.scan`` dispatch.
+
+        ``batches`` is a pytree whose leaves are stacked on a leading N
+        axis (step i consumes slice i). Per-step seeds are derived inside
+        the scan as ``fold_seed(base_seed, state.step)`` — identical to
+        the Trainer's per-step derivation, so a chunked run is
+        seed-compatible (and replay-log-compatible) with a stepwise one.
+        Returns the final state and a stacked MezoAux (leaves gain a
+        leading N axis).
+        """
+        return _jit_chunk(self, loss_fn, state, batches,
+                          jnp.asarray(base_seed, jnp.uint32), cfg)
+
+
+# ---------------------------------------------------------------------------
+# the strategy registry (builder pattern: names -> composed strategies)
+
+
+_ESTIMATORS: Dict[str, DirectionEvaluator] = {}
+_UPDATE_RULES: Dict[str, UpdateRule] = {}
+_STRATEGY_ALIASES: Dict[str, Tuple[str, str]] = {}
+_STRATEGY_CACHE: Dict[Tuple[str, str], ZOStrategy] = {}
+
+
+def register_estimator(e: DirectionEvaluator) -> DirectionEvaluator:
+    _ESTIMATORS[e.name] = e
+    return e
+
+
+def register_update_rule(u: UpdateRule) -> UpdateRule:
+    _UPDATE_RULES[u.name] = u
+    return u
+
+
+def register_strategy(name: str, estimator: str, update: str) -> None:
+    """Bind a short name (e.g. ``"mezo-fused"``) to a pairing."""
+    _STRATEGY_ALIASES[name] = (estimator, update)
+
+
+def estimator_names():
+    return sorted(_ESTIMATORS)
+
+
+def update_rule_names():
+    return sorted(_UPDATE_RULES)
+
+
+def strategy_names():
+    return sorted(_STRATEGY_ALIASES)
+
+
+def build_strategy(estimator: str = "walk", update: str = "sgd"
+                   ) -> ZOStrategy:
+    """Compose any estimator×update pairing by name (cached singletons,
+    so jit caches keyed on the strategy stay warm)."""
+    if estimator not in _ESTIMATORS:
+        raise ValueError(
+            f"unknown direction estimator {estimator!r}; "
+            f"registered: {estimator_names()}")
+    if update not in _UPDATE_RULES:
+        raise ValueError(
+            f"unknown update rule {update!r}; "
+            f"registered: {update_rule_names()}")
+    key = (estimator, update)
+    if key not in _STRATEGY_CACHE:
+        _STRATEGY_CACHE[key] = ZOStrategy(
+            estimator=_ESTIMATORS[estimator], update=_UPDATE_RULES[update])
+    return _STRATEGY_CACHE[key]
+
+
+def get_strategy(name: str) -> ZOStrategy:
+    """Resolve a registered strategy name (legacy ``--optimizer`` values)."""
+    if name not in _STRATEGY_ALIASES:
+        raise ValueError(
+            f"unknown ZO strategy {name!r}; registered strategies: "
+            f"{strategy_names()} (any estimator×update pairing is "
+            f"constructible via build_strategy: {estimator_names()} × "
+            f"{update_rule_names()})")
+    return build_strategy(*_STRATEGY_ALIASES[name])
+
+
+WALK = register_estimator(DirectionEvaluator(
+    name="walk", eval_fn=_eval_walk, pristine=False, donate=True))
+VMAPDIR = register_estimator(DirectionEvaluator(
+    name="vmapdir", eval_fn=_eval_vmapdir, pristine=True, donate=False))
+FUSED = register_estimator(DirectionEvaluator(
+    name="fused", eval_fn=_eval_fused, pristine=True, donate=True))
+
+SGD = register_update_rule(UpdateRule(
+    name="sgd", init_fn=_sgd_init, update_fn=_sgd_update))
+MOMENTUM = register_update_rule(UpdateRule(
+    name="momentum", init_fn=momentum_history_init,
+    update_fn=_momentum_update))
+
+register_strategy("mezo", "walk", "sgd")
+register_strategy("mezo-parallel", "vmapdir", "sgd")
+register_strategy("mezo-fused", "fused", "sgd")
+register_strategy("mezo-momentum", "vmapdir", "momentum")
+register_strategy("mezo-fused-momentum", "fused", "momentum")

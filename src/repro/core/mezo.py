@@ -8,105 +8,39 @@ Implements SPSA (Spall 1992) with MeZO's seed-replay storage trick
     g  = (l+ - l-) / (2 eps)
     theta <- theta - lr * g * z
 
-Three execution strategies:
+The step machinery itself lives in :mod:`repro.core.engine` as a
+composable estimator×update strategy matrix; this module keeps the
+historical step-function entry points as thin wrappers over registered
+strategies, plus the standalone replay / analysis helpers:
 
-* ``mezo_step`` -- sequential over K directions with the *in-place walk*
-  (perturb / eval / counter-perturb / eval / restore-fused-with-update):
-  peak memory = params + one forward's activations. This is the
-  paper-faithful memory profile (PocketLLM Table 1). Cost: 3 full
-  parameter sweeps per direction on top of the 2 forwards.
-
-* ``mezo_step_vmapdir`` -- vmaps direction evaluation so a pod axis can
-  evaluate directions concurrently (PocketLLM Sec 6.3's "inherent
-  parallelization potential", realized). Costs one extra transient param
-  copy per device; cross-pod traffic is K scalars, not N gradients.
-
-* ``mezo_step_fused`` -- the perturbation never touches the parameters at
-  all: a :class:`repro.core.perturb_ctx.PerturbCtx` with ``coeff=+/-eps``
-  rides into the forward and each dense projection computes
-  ``X @ (W + coeff*z)`` via the fused Pallas kernel (z regenerated in
-  VMEM). 0 param sweeps per direction, no whole-tree transient copy;
-  non-matmul leaves (norm scales, gated MLP weights, tied unembeds) fall
-  back to a transient leaf-sized ``coeff*z``, and the only remaining
-  sweep is the shared seed-replay update. Requires a loss_fn that
-  accepts ``perturb=`` (models built by repro.models.build_model do;
-  families without a wired fused forward fall back to one transient
-  materialized copy, the vmapdir memory profile).
+* ``mezo_step``         -> strategy ``walk + sgd``    ("mezo")
+* ``mezo_step_vmapdir`` -> strategy ``vmapdir + sgd`` ("mezo-parallel")
+* ``mezo_step_fused``   -> strategy ``fused + sgd``   ("mezo-fused")
+* ``mezo_momentum_step``-> strategy ``vmapdir + momentum``
 
 All return the new params plus a :class:`MezoAux` record whose
 ``(seed, gs)`` pair is exactly what the replay-log checkpointer persists
-(~12 bytes/step/direction) -- see repro/checkpoint/replay_log.py. The
-fused step shares the update arithmetic of ``mezo_step_vmapdir``
-(pristine base point), so its replay is bit-exact.
+(~12 bytes/step/direction) -- see repro/checkpoint/replay_log.py. Every
+strategy shares the engine's f32 update tail, so the replay log is
+interchangeable across them (bit-exact for the pristine-base-point
+estimators ``vmapdir`` / ``fused``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import rng as zrng
+from repro.core.engine import (  # noqa: F401  (re-exported back-compat API)
+    MezoAux, MezoConfig, TrainState, _apply_direction_updates, _decay,
+    _direction_coeffs, build_strategy, get_strategy, momentum_history_init)
+from repro.core.engine import LossFn, PyTree, SGD
 from repro.core.perturb import add_scaled_z
-from repro.core.perturb_ctx import PerturbCtx
-
-PyTree = Any
-LossFn = Callable[[PyTree, Any], jnp.ndarray]  # (params, batch) -> scalar
 
 
-@dataclasses.dataclass(frozen=True)
-class MezoConfig:
-    eps: float = 1e-3
-    lr: float = 1e-6
-    n_directions: int = 1          # K: SPSA directions averaged per step
-    dist: str = "rademacher"       # or "gaussian" (MeZO-repo default)
-    use_kernel: bool = False       # route 2-D leaves via Pallas zo_add
-    momentum: float = 0.0          # ZO momentum via truncated seed replay
-    momentum_window: int = 8       # directions of history to replay
-    weight_decay: float = 0.0
-
-
-@dataclasses.dataclass
-class MezoAux:
-    loss: jnp.ndarray         # mean of (l+ + l-)/2 over directions
-    gs: jnp.ndarray           # (K,) projected gradients -- the replay log
-    seed: jnp.ndarray         # uint32 step seed -- the replay log
-    grad_norm_est: jnp.ndarray
-
-
-jax.tree_util.register_pytree_node(
-    MezoAux,
-    lambda a: ((a.loss, a.gs, a.seed, a.grad_norm_est), None),
-    lambda _, c: MezoAux(*c),
-)
-
-
-def _apply_direction_updates(params, seed, gs, coeffs, cfg: MezoConfig):
-    """theta += sum_k coeffs[k] * gs[k] * z_k, z_k regenerated per k."""
-    k_tot = gs.shape[0]
-
-    def body(p, kg):
-        k, g, c = kg
-        return add_scaled_z(p, zrng.fold_seed(seed, k), c * g,
-                            dist=cfg.dist, use_kernel=cfg.use_kernel), None
-
-    params, _ = jax.lax.scan(
-        body, params, (jnp.arange(k_tot, dtype=jnp.uint32), gs, coeffs))
-    return params
-
-
-def _decay(params, wd_coeff):
-    if wd_coeff is None:
-        return params
-    return jax.tree.map(
-        lambda p: (p * (1.0 - wd_coeff)).astype(p.dtype)
-        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
-
-
-@partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1,))
 def mezo_step(loss_fn: LossFn, params: PyTree, batch: Any, seed,
               cfg: MezoConfig, direction_mask=None):
     """Paper-faithful sequential MeZO step (in-place walk, donated params).
@@ -115,184 +49,69 @@ def mezo_step(loss_fn: LossFn, params: PyTree, batch: Any, seed,
     late directions; the update renormalizes over survivors (an unbiased
     lower-sample SPSA estimate, unique to ZO: no gradient shard is lost).
     """
-    seed = jnp.asarray(seed, jnp.uint32)
-    eps = jnp.float32(cfg.eps)
-    lr = jnp.float32(cfg.lr)
-    kk = cfg.n_directions
-
-    def one_dir(p, k):
-        s = zrng.fold_seed(seed, k)
-        p = add_scaled_z(p, s, eps, dist=cfg.dist, use_kernel=cfg.use_kernel)
-        lp = loss_fn(p, batch)
-        p = add_scaled_z(p, s, -2.0 * eps, dist=cfg.dist,
-                         use_kernel=cfg.use_kernel)
-        lm = loss_fn(p, batch)
-        # restore to base point for the next direction
-        p = add_scaled_z(p, s, eps, dist=cfg.dist, use_kernel=cfg.use_kernel)
-        g = (lp - lm) / (2.0 * eps)
-        return p, (g, 0.5 * (lp + lm))
-
-    params, (gs, ls) = jax.lax.scan(
-        one_dir, params, jnp.arange(kk, dtype=jnp.uint32))
-    return _finish_step(params, seed, gs, ls, lr, direction_mask, cfg)
+    strat = get_strategy("mezo")
+    state, aux = strat.step(loss_fn, strat.init_state(params, cfg), batch,
+                            seed, cfg, direction_mask)
+    return state.params, aux
 
 
-def _direction_coeffs(kk: int, lr, direction_mask):
-    if direction_mask is None:
-        return jnp.full((kk,), -lr / kk, jnp.float32)
-    m = jnp.asarray(direction_mask, jnp.float32).reshape(kk)
-    return -lr * m / jnp.maximum(m.sum(), 1.0)
-
-
-def _finish_step(params, seed, gs, ls, lr, direction_mask, cfg: MezoConfig):
-    """Shared update tail of every strategy: identical f32 arithmetic here
-    is what makes the (seed, gs) replay log interchangeable across them
-    (and bit-exact for the pristine-base-point strategies)."""
-    coeffs = _direction_coeffs(cfg.n_directions, lr, direction_mask)
-    if cfg.weight_decay:
-        params = _decay(params, lr * cfg.weight_decay)
-    params = _apply_direction_updates(params, seed, gs, coeffs, cfg)
-    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
-                  grad_norm_est=jnp.abs(gs).mean())
-    return params, aux
-
-
-@partial(jax.jit, static_argnames=("loss_fn", "cfg"))
 def mezo_step_vmapdir(loss_fn: LossFn, params: PyTree, batch: Any, seed,
                       cfg: MezoConfig, direction_mask=None):
-    """Direction-parallel MeZO step.
-
-    The K-way vmap axis is what the launcher shards over the ``pod`` mesh
-    axis (see launch/train.py): each pod evaluates its directions on the
-    full (data-sharded) batch; the only cross-pod exchange is the (K,)
-    vector ``gs``.
-    """
-    seed = jnp.asarray(seed, jnp.uint32)
-    eps = jnp.float32(cfg.eps)
-    lr = jnp.float32(cfg.lr)
-    kk = cfg.n_directions
-
-    def eval_dir(k):
-        s = zrng.fold_seed(seed, k)
-        lp = loss_fn(add_scaled_z(params, s, eps, dist=cfg.dist), batch)
-        lm = loss_fn(add_scaled_z(params, s, -eps, dist=cfg.dist), batch)
-        return (lp - lm) / (2.0 * eps), 0.5 * (lp + lm)
-
-    gs, ls = jax.vmap(eval_dir)(jnp.arange(kk, dtype=jnp.uint32))
-    return _finish_step(params, seed, gs, ls, lr, direction_mask, cfg)
+    """Direction-parallel MeZO step (strategy ``vmapdir + sgd``)."""
+    strat = get_strategy("mezo-parallel")
+    state, aux = strat.step(loss_fn, strat.init_state(params, cfg), batch,
+                            seed, cfg, direction_mask)
+    return state.params, aux
 
 
-@partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1,))
 def mezo_step_fused(loss_fn: LossFn, params: PyTree, batch: Any, seed,
                     cfg: MezoConfig, direction_mask=None):
     """Fused perturbed-forward MeZO step: 0 param sweeps per direction.
 
-    l+ and l- are evaluated with ``coeff=+/-eps`` carried into the forward
-    by a :class:`PerturbCtx` -- params are read-only until the final
-    seed-replay update, which is shared with the other strategies (so the
-    (seed, gs) replay log stays interchangeable). ``loss_fn`` must accept
-    a ``perturb=`` keyword; both sides of each direction see the exact
-    z-fields ``add_scaled_z`` would apply, so losses match
-    ``mezo_step_vmapdir`` bit-for-bit on the jnp path in f32.
+    ``loss_fn`` must accept a ``perturb=`` keyword (models built by
+    repro.models.build_model do).
     """
-    seed = jnp.asarray(seed, jnp.uint32)
-    eps = jnp.float32(cfg.eps)
-    lr = jnp.float32(cfg.lr)
-    kk = cfg.n_directions
-
-    def one_dir(_, k):
-        s = zrng.fold_seed(seed, k)
-        ctx = PerturbCtx(seed=s, coeff=eps, dist=cfg.dist,
-                         use_kernel=cfg.use_kernel)
-        lp = loss_fn(params, batch, perturb=ctx)
-        lm = loss_fn(params, batch,
-                     perturb=dataclasses.replace(ctx, coeff=-eps))
-        return None, ((lp - lm) / (2.0 * eps), 0.5 * (lp + lm))
-
-    _, (gs, ls) = jax.lax.scan(one_dir, None,
-                               jnp.arange(kk, dtype=jnp.uint32))
-    return _finish_step(params, seed, gs, ls, lr, direction_mask, cfg)
+    strat = get_strategy("mezo-fused")
+    state, aux = strat.step(loss_fn, strat.init_state(params, cfg), batch,
+                            seed, cfg, direction_mask)
+    return state.params, aux
 
 
-@partial(jax.jit, static_argnames=("loss_fn", "cfg"), donate_argnums=(1,))
 def mezo_momentum_step(loss_fn: LossFn, params: PyTree, batch: Any, seed,
                        cfg: MezoConfig, hist):
-    """ZO-momentum via truncated seed replay (paper Sec 6.2 asks for
-    faster derivative-free methods).
+    """ZO-momentum step (strategy ``vmapdir + momentum``).
 
-    Classical momentum needs a param-sized velocity buffer -- exactly the
-    memory MeZO exists to avoid. But the ZO velocity is structurally
-      v_t = sum_i beta^{t-i} g_i z_i,
-    so a truncated window of M (seed, g) PAIRS represents it in O(M)
-    scalars; the update replays the last M directions with geometric
-    weights. Memory: M*(K+1) scalars. Compute: M extra z-regeneration
-    sweeps per step (bandwidth-bound, no forwards).
-
-    hist: {"seeds": (M,) uint32, "gs": (M, K) f32} (zeros = empty slots;
-    g=0 entries are no-ops). Returns (params, aux, new_hist).
+    hist: the truncated seed-replay window from
+    :func:`momentum_history_init` (or the previous call's return).
+    Returns (params, aux, new_hist). Pre-engine histories without the
+    per-entry ``coeffs`` row are upgraded with the ``-lr/K`` coefficient
+    the old step function applied to every row (g=0 rows stay no-ops).
     """
-    seed = jnp.asarray(seed, jnp.uint32)
-    eps = jnp.float32(cfg.eps)
-    lr = jnp.float32(cfg.lr)
-    kk = cfg.n_directions
-    beta = jnp.float32(cfg.momentum)
-    m = cfg.momentum_window
-
-    def eval_dir(k):
-        s = zrng.fold_seed(seed, k)
-        lp = loss_fn(add_scaled_z(params, s, eps, dist=cfg.dist), batch)
-        lm = loss_fn(add_scaled_z(params, s, -eps, dist=cfg.dist), batch)
-        return (lp - lm) / (2.0 * eps), 0.5 * (lp + lm)
-
-    gs, ls = jax.vmap(eval_dir)(jnp.arange(kk, dtype=jnp.uint32))
-
-    # roll the window: newest last
-    seeds_h = jnp.concatenate([hist["seeds"][1:], seed[None]])
-    gs_h = jnp.concatenate([hist["gs"][1:], gs[None]])
-
-    # apply sum_j beta^(M-1-j) * (-lr/K) * g_jk * z(seed_j, k)
-    ages = jnp.arange(m - 1, -1, -1, dtype=jnp.float32)
-    weights = (1.0 - beta) * beta ** ages if cfg.momentum else         jnp.where(ages == 0, 1.0, 0.0)
-
-    def body(p, inp):
-        s_j, g_j, w_j = inp
-
-        def dir_body(pp, kg):
-            k, g = kg
-            return add_scaled_z(pp, zrng.fold_seed(s_j, k),
-                                -lr * w_j * g / kk, dist=cfg.dist), None
-        p, _ = jax.lax.scan(
-            dir_body, p, (jnp.arange(kk, dtype=jnp.uint32), g_j))
-        return p, None
-
-    if cfg.weight_decay:
-        params = _decay(params, lr * cfg.weight_decay)
-    params, _ = jax.lax.scan(body, params, (seeds_h, gs_h, weights))
-    aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
-                  grad_norm_est=jnp.abs(gs).mean())
-    return params, aux, {"seeds": seeds_h, "gs": gs_h}
+    if "coeffs" not in hist:
+        kk = hist["gs"].shape[1]
+        hist = dict(hist, coeffs=jnp.full_like(
+            hist["gs"], -jnp.float32(cfg.lr) / kk))
+    strat = build_strategy("vmapdir", "momentum")
+    state = TrainState(params=params, step=jnp.uint32(0), opt=hist)
+    state, aux = strat.step(loss_fn, state, batch, seed, cfg)
+    return state.params, aux, state.opt
 
 
-def momentum_history_init(cfg: MezoConfig):
-    return {"seeds": jnp.zeros((cfg.momentum_window,), jnp.uint32),
-            "gs": jnp.zeros((cfg.momentum_window, cfg.n_directions),
-                            jnp.float32)}
-
-
-def replay_update(params: PyTree, seed, gs, cfg: MezoConfig):
+def replay_update(params: PyTree, seed, gs, cfg: MezoConfig,
+                  direction_mask=None):
     """Re-apply a logged step's update from its (seed, gs) record.
 
     This is the recovery path of the replay-log checkpointer: a crashed
     worker reconstructs theta_t from theta_0 and the scalar log at memory
-    bandwidth, with zero forward passes.
+    bandwidth, with zero forward passes. It *is* the engine's sgd update
+    rule -- identical f32 arithmetic to the live step (including the f32
+    ``lr * weight_decay`` coefficient), hence bit-exact replay for the
+    pristine-base-point estimators. ``direction_mask`` is the logged
+    straggler mask of the step, so replay renormalizes over the same
+    surviving directions.
     """
-    seed = jnp.asarray(seed, jnp.uint32)
-    gs = jnp.asarray(gs, jnp.float32).reshape(-1)
-    # identical f32 arithmetic to the live step -> bit-exact replay
-    coeffs = _direction_coeffs(gs.shape[0], jnp.float32(cfg.lr), None)
-    if cfg.weight_decay:
-        params = _decay(params, cfg.lr * cfg.weight_decay)
-    return _apply_direction_updates(params, seed, gs, coeffs, cfg)
+    params, _ = SGD.update_fn(params, {}, seed, gs, direction_mask, cfg)
+    return params
 
 
 def spsa_gradient_estimate(loss_fn: LossFn, params: PyTree, batch: Any,

@@ -6,6 +6,13 @@ device (examples/quickstart.py) -- same code path, smaller shapes.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
       --optimizer mezo --steps 200 --batch 8 --seq 64
+
+The training strategy is resolved from the core engine's registry:
+``--optimizer`` names a registered strategy (or ``adam``), while
+``--estimator`` / ``--update`` compose any pairing from the
+estimator×update matrix directly, e.g.
+
+  ... --estimator fused --update momentum --momentum 0.9
 """
 
 from __future__ import annotations
@@ -15,10 +22,11 @@ import dataclasses
 import json
 import os
 
-import jax
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config
+from repro.core.engine import (estimator_names, strategy_names,
+                               update_rule_names)
 from repro.core.mezo import MezoConfig
 from repro.data.synthetic import lm_batches, sst2_batches
 from repro.optim.adam import AdamConfig
@@ -57,9 +65,13 @@ def make_trainer(args) -> Trainer:
 
     tcfg = TrainerConfig(
         optimizer=args.optimizer,
+        estimator=args.estimator, update=args.update,
         mezo=MezoConfig(eps=args.eps, lr=args.lr,
                         n_directions=args.directions, dist=args.zo_dist,
-                        use_kernel=args.use_kernel),
+                        use_kernel=args.use_kernel,
+                        momentum=args.momentum,
+                        momentum_window=args.momentum_window,
+                        weight_decay=args.weight_decay),
         adam=AdamConfig(lr=args.adam_lr),
         n_steps=args.steps, seed=args.seed, ckpt_dir=args.ckpt_dir,
         snapshot_every=args.snapshot_every, log_every=args.log_every,
@@ -67,13 +79,21 @@ def make_trainer(args) -> Trainer:
     return Trainer(cfg, tcfg, batches)
 
 
-def main():
+def build_argparser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt-1.3b", choices=ALL_ARCHS)
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-sized config of the same family")
     ap.add_argument("--optimizer", default="mezo",
-                    choices=["mezo", "mezo-parallel", "mezo-fused", "adam"])
+                    choices=strategy_names() + ["adam"],
+                    help="registered strategy name, or adam (gradient "
+                         "baseline)")
+    ap.add_argument("--estimator", default=None,
+                    choices=estimator_names(),
+                    help="direction evaluator; with --update, composes any "
+                         "estimator×update pairing (overrides --optimizer)")
+    ap.add_argument("--update", default=None, choices=update_rule_names(),
+                    help="update rule applied to the (seed, gs) estimate")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -81,6 +101,12 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-4)
     ap.add_argument("--adam-lr", type=float, default=1e-4)
     ap.add_argument("--directions", type=int, default=1)
+    ap.add_argument("--momentum", type=float, default=0.9,
+                    help="ZO momentum beta (momentum update rule only)")
+    ap.add_argument("--momentum-window", type=int, default=8,
+                    help="steps of (seed, gs) history the truncated "
+                         "seed-replay momentum keeps")
+    ap.add_argument("--weight-decay", type=float, default=0.0)
     ap.add_argument("--zo-dist", default="rademacher",
                     choices=["rademacher", "gaussian"])
     ap.add_argument("--use-kernel", action="store_true",
@@ -94,7 +120,11 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--straggler-redundancy", type=int, default=0)
     ap.add_argument("--metrics-out", default=None)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_argparser().parse_args()
 
     tr = make_trainer(args)
     params = tr.train()

@@ -9,7 +9,7 @@ stays unbiased. The scheme:
   * schedule K + R directions per step (R redundant),
   * accept the first K to finish (here: a deadline against the median of
     an EMA of per-direction latencies),
-  * renormalize the update over survivors (core.mezo._direction_coeffs).
+  * renormalize the update over survivors (core.engine._direction_coeffs).
 
 On a synchronous single-controller run we cannot observe true per-pod
 latencies, so the policy also accepts externally reported "slow pod"

@@ -1,10 +1,17 @@
 """Fault-tolerant training loop for ZO (MeZO) and gradient (Adam) arms.
 
-Responsibilities: build model + shardings, auto-resume (snapshot + replay
-log), per-step straggler masks, metrics, periodic checkpointing. The loop
-is deliberately dumb -- all cleverness lives in core/ and checkpoint/ --
-so its failure behavior is auditable: any crash between two ``on_step``
+Responsibilities: build model + shardings, resolve the training strategy
+from the engine registry, auto-resume (TrainState snapshot + replay log),
+per-step straggler masks, metrics, periodic checkpointing. The loop is
+deliberately dumb -- all cleverness lives in core/ and checkpoint/ -- so
+its failure behavior is auditable: any crash between two ``on_step``
 calls loses at most the step in flight.
+
+Strategy resolution: ``TrainerConfig.optimizer`` names a registered
+strategy ("mezo", "mezo-parallel", "mezo-fused", "mezo-momentum", ...)
+or "adam" for the gradient baseline; setting ``estimator`` / ``update``
+composes any pairing from the engine's estimator×update matrix directly
+(e.g. estimator="fused", update="momentum").
 """
 
 from __future__ import annotations
@@ -15,12 +22,12 @@ from typing import Any, Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import rng as zrng
-from repro.core.mezo import (MezoConfig, mezo_step, mezo_step_fused,
-                             mezo_step_vmapdir)
+from repro.core.engine import (TrainState, build_strategy, get_strategy,
+                               strategy_names)
+from repro.core.mezo import MezoConfig
 from repro.models import build_model
 from repro.models.config import ModelConfig
 from repro.optim.adam import AdamConfig, adam_init, grad_train_step
@@ -31,7 +38,9 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class TrainerConfig:
-    optimizer: str = "mezo"          # mezo | mezo-parallel | mezo-fused | adam
+    optimizer: str = "mezo"          # registered strategy name | adam
+    estimator: Optional[str] = None  # walk | vmapdir | fused (overrides
+    update: Optional[str] = None     # sgd | momentum        .. optimizer)
     mezo: MezoConfig = MezoConfig()
     adam: AdamConfig = AdamConfig()
     n_steps: int = 100
@@ -46,6 +55,27 @@ class Trainer:
     def __init__(self, model_cfg: ModelConfig, train_cfg: TrainerConfig,
                  batches: Iterator[Any], mesh=None,
                  log_fn: Callable[[str], None] = print):
+        self.strategy = None
+        if train_cfg.optimizer == "adam":
+            if train_cfg.estimator or train_cfg.update:
+                raise ValueError(
+                    "TrainerConfig.estimator/.update compose ZO strategies "
+                    "and cannot be combined with optimizer='adam' (the "
+                    "gradient baseline has no estimator×update axes)")
+        else:
+            if train_cfg.estimator or train_cfg.update:
+                self.strategy = build_strategy(
+                    train_cfg.estimator or "walk", train_cfg.update or "sgd")
+            elif train_cfg.optimizer not in strategy_names():
+                raise ValueError(
+                    f"unknown TrainerConfig.optimizer "
+                    f"{train_cfg.optimizer!r}; registered strategies: "
+                    f"{strategy_names() + ['adam']} (or compose any "
+                    f"estimator×update pairing via TrainerConfig.estimator"
+                    f"/.update)")
+            else:
+                self.strategy = get_strategy(train_cfg.optimizer)
+
         self.mcfg = model_cfg
         self.tcfg = train_cfg
         self.model = build_model(model_cfg)
@@ -53,6 +83,7 @@ class Trainer:
         self.mesh = mesh
         self.log = log_fn
         self.losses: list = []
+        self._pending: list = []     # device loss scalars awaiting host sync
         self._straggler = (StragglerPolicy(
             train_cfg.mezo.n_directions,
             train_cfg.straggler_redundancy)
@@ -60,9 +91,9 @@ class Trainer:
 
         self.ckpt = (CheckpointManager(
             train_cfg.ckpt_dir,
-            mezo_cfg=(train_cfg.mezo if train_cfg.optimizer != "adam"
-                      else None),
-            snapshot_every=train_cfg.snapshot_every)
+            mezo_cfg=(self._mezo_cfg() if self.strategy else None),
+            snapshot_every=train_cfg.snapshot_every,
+            update_rule=(self.strategy.update if self.strategy else None))
             if train_cfg.ckpt_dir else None)
 
     # -- setup ------------------------------------------------------------
@@ -76,28 +107,35 @@ class Trainer:
                 c, n_directions=self._straggler.total)
         return c
 
+    def _init_state(self, params: PyTree, mcfg: MezoConfig) -> TrainState:
+        if self.strategy is not None:
+            return self.strategy.init_state(params, mcfg)
+        return TrainState(params=params, step=jnp.uint32(0),
+                          opt=adam_init(params))
+
+    def _sync_losses(self):
+        """Host-sync the buffered device scalars (one transfer per batch
+        of steps instead of one per step)."""
+        if self._pending:
+            self.losses.extend(float(x) for x in self._pending)
+            self._pending.clear()
+
     # -- main loop --------------------------------------------------------
     def train(self, params: Optional[PyTree] = None,
               fail_at: Optional[int] = None) -> PyTree:
         """Runs to n_steps with auto-resume. ``fail_at`` raises at that
         step (fault-injection for tests)."""
         start = 0
+        mcfg = self._mezo_cfg()
+        resume = params is None
         if params is None:
             params = self.init_params()
-            if self.ckpt:
-                restored, start = self.ckpt.restore(params)
-                if restored is not None:
-                    params = restored
-                    self.log(f"[trainer] resumed at step {start}")
-
-        opt_state = None
-        if self.tcfg.optimizer == "adam":
-            opt_state = adam_init(params)
-
-        mcfg = self._mezo_cfg()
-        step_fn = {"mezo": mezo_step, "mezo-parallel": mezo_step_vmapdir,
-                   "mezo-fused": mezo_step_fused,
-                   "adam": None}[self.tcfg.optimizer]
+        state = self._init_state(params, mcfg)
+        if resume and self.ckpt:
+            restored, start = self.ckpt.restore(state)
+            if restored is not None:
+                state = restored
+                self.log(f"[trainer] resumed at step {start}")
 
         t0 = time.perf_counter()
         for step in range(start, self.tcfg.n_steps):
@@ -107,24 +145,28 @@ class Trainer:
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             seed = zrng.fold_seed(jnp.uint32(self.tcfg.seed), step)
 
-            if self.tcfg.optimizer == "adam":
-                params, opt_state, loss = grad_train_step(
-                    self.model.loss, params, batch, opt_state,
+            mask = None
+            if self.strategy is None:
+                p, opt, loss = grad_train_step(
+                    self.model.loss, state.params, batch, state.opt,
                     self.tcfg.adam)
+                state = TrainState(params=p, step=jnp.uint32(step + 1),
+                                   opt=opt)
                 aux = None
-                self.losses.append(float(loss))
+                self._pending.append(loss)
             else:
-                mask = None
                 if self._straggler:
                     mask = jnp.asarray(self._straggler.mask())
-                params, aux = step_fn(self.model.loss, params, batch, seed,
-                                      mcfg, mask)
-                self.losses.append(float(aux.loss))
+                state, aux = self.strategy.step(
+                    self.model.loss, state, batch, seed, mcfg, mask)
+                self._pending.append(aux.loss)
 
             if self.ckpt:
-                self.ckpt.on_step(step, params, aux)
+                self.ckpt.on_step(step, state, aux, direction_mask=mask)
             if step % self.tcfg.log_every == 0:
+                self._sync_losses()
                 dt = time.perf_counter() - t0
                 self.log(f"[trainer] step={step} loss={self.losses[-1]:.4f} "
                          f"({dt:.1f}s)")
-        return params
+        self._sync_losses()
+        return state.params
