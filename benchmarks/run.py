@@ -16,10 +16,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import fig1_loss, roofline, table1_memory, table2_walltime
+    from benchmarks import (fig1_loss, roofline, table1_memory,
+                            table2_walltime, table3_serving)
     mods = {
         "table1": table1_memory,
         "table2": table2_walltime,
+        "table3": table3_serving,
         "fig1": fig1_loss,
         "roofline": roofline,
     }

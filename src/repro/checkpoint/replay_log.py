@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -34,7 +35,23 @@ class ReplayLog:
         self.path = path
         self.fsync = fsync
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._seal_torn_tail(path)
         self._f = open(path, "a", buffering=1)
+
+    @staticmethod
+    def _seal_torn_tail(path: str):
+        """A crash mid-append can leave a torn final line with NO
+        newline; appending the restart's retried record would glue onto
+        it and corrupt *both* lines. Seal the tear before appending."""
+        try:
+            with open(path, "rb") as f:
+                f.seek(-1, os.SEEK_END)
+                torn = f.read(1) != b"\n"
+        except (FileNotFoundError, OSError):
+            return                        # missing or empty file
+        if torn:
+            with open(path, "ab") as f:
+                f.write(b"\n")
 
     def append(self, step: int, seed, gs, lr: float, eps: float,
                mask=None):
@@ -56,19 +73,33 @@ class ReplayLog:
     @staticmethod
     def read(path: str, after_step: Optional[int] = None
              ) -> List[dict]:
-        """Records with step > after_step, in order, tolerating a torn
-        final line (crash mid-append)."""
-        out = []
+        """Records with step > after_step, in order, tolerating corrupt
+        lines (crash mid-append). A torn write is usually the tail, but a
+        crash-then-restart appends *past* it -- so bad lines are skipped,
+        not treated as end-of-log, and the retried step dedups below.
+        Drops are counted and reported in one warning."""
+        out, dropped = [], 0
         if not os.path.exists(path):
             return out
         with open(path) as f:
             for line in f:
+                if not line.strip():
+                    continue
                 try:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
-                    break  # torn tail write -- everything before is valid
+                    dropped += 1
+                    continue
+                if not isinstance(rec, dict) or "step" not in rec:
+                    dropped += 1     # parseable junk (e.g. a bare number)
+                    continue
                 if after_step is None or rec["step"] > after_step:
                     out.append(rec)
+        if dropped:
+            warnings.warn(
+                f"ReplayLog.read({path}): dropped {dropped} corrupt "
+                f"line(s) (torn append); kept {len(out)} valid record(s)",
+                RuntimeWarning, stacklevel=2)
         # de-duplicate on step (a retried step may be appended twice)
         seen, dedup = set(), []
         for r in out:

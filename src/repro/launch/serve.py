@@ -1,11 +1,14 @@
-"""Serving launcher: batched prefill + decode against a KV cache.
+"""Serving launcher: thin CLI over the personalized serving subsystem.
 
-The personalized-LLM story of the paper is fine-tune-then-serve on the
-same device; this driver serves a (possibly ZO-fine-tuned) checkpoint
-with batched requests.
+The engine lives in :mod:`repro.serve` (AdapterStore + fused prefill +
+continuous-batching decode); this module keeps (a) ``serve()``, the
+reference per-token generation loop the parity tests pin the engine
+against, and (b) a CLI that builds an engine, loads per-user ZO adapters
+from replay logs, and serves a synthetic request mix:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --requests 4 --prompt-len 16 --gen 8
+      --requests 4 --prompt-len 16 --gen 8 \
+      --adapter alice=/tmp/ckpt_alice --adapter bob=/tmp/ckpt_bob
 """
 
 from __future__ import annotations
@@ -19,33 +22,44 @@ import numpy as np
 
 from repro.checkpoint import store
 from repro.configs import ALL_ARCHS, get_config
+from repro.core import MezoConfig
 from repro.models import build_model
+from repro.serve import (AdapterStore, Request, ServeEngine, sample_topk,
+                         step_keys)
 
 
-def serve(cfg, params, prompts: np.ndarray, gen: int, greedy: bool = True):
-    """prompts: (B, P) int32. Returns (B, gen) generated tokens."""
+def serve(cfg, params, prompts: np.ndarray, gen: int, greedy: bool = True,
+          topk: int = 8, seed: int = 0):
+    """Reference per-token loop: prefill token-by-token through the
+    decode cell, then decode. Kept as the parity oracle for the fused
+    prefill path (tests/test_serve.py) and as the simplest possible
+    serving implementation.
+
+    prompts: (B, P) int32. Returns (B, gen) generated tokens. Sampling
+    is seeded: one key split per step, folded per slot -- runs with
+    different ``seed`` values draw independent streams.
+    """
     model = build_model(cfg)
     bsz, plen = prompts.shape
     cache = model.init_cache(bsz, plen + gen)
     step = jax.jit(model.decode_step, donate_argnums=(1,))
+    key = jax.random.PRNGKey(seed)
 
     toks = jnp.asarray(prompts)
     out = []
     last = None
     for t in range(plen + gen - 1):
-        # prefill token-by-token through the decode path (exercises the
-        # same cell the dry-run lowers; a fused prefill is a perf option)
         if t < plen:
             cur = toks[:, t:t + 1]
         else:
             cur = last
             out.append(np.asarray(cur))
         logits, cache = step(params, cache, cur, jnp.int32(t))
-        last = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32) \
-            if greedy else jnp.asarray(
-                jax.random.categorical(jax.random.PRNGKey(t),
-                                       logits[:, -1, :])[:, None],
-                jnp.int32)
+        if greedy:
+            last = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        else:
+            key, slot_keys = step_keys(key, bsz)
+            last = sample_topk(slot_keys, logits[:, -1, :], topk)[:, None]
     out.append(np.asarray(last))
     return np.concatenate(out, axis=1)[:, :gen]
 
@@ -54,10 +68,29 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=ALL_ARCHS)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="load BASE params from this checkpoint dir")
+    ap.add_argument("--adapter", action="append", default=[],
+                    metavar="USER=CKPT_DIR",
+                    help="register USER's replay log as a ZO adapter "
+                         "(repeatable); requests round-robin over users")
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--sample", action="store_true",
+                    help="seeded top-k sampling instead of greedy")
+    ap.add_argument("--topk", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dist", default="rademacher",
+                    choices=("rademacher", "gaussian"),
+                    help="perturbation dist the adapters were trained with")
+    ap.add_argument("--weight-decay", type=float, default=0.0,
+                    help="weight decay the adapters were trained with "
+                         "(replay must apply the same decay coefficient)")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="adapter-store byte budget for materialized trees")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -69,17 +102,46 @@ def main():
         step = store.latest_step(args.ckpt_dir)
         if step is not None:
             params = store.load_params(args.ckpt_dir, step, params)
-            print(f"[serve] loaded checkpoint step {step}")
+            print(f"[serve] loaded base checkpoint step {step}")
 
-    rng = np.random.default_rng(0)
+    adapters = AdapterStore(
+        params, MezoConfig(dist=args.dist, weight_decay=args.weight_decay),
+        cache_bytes=(int(args.cache_mb * 2**20) if args.cache_mb else None))
+    users = []
+    for spec in args.adapter:
+        user, _, ckpt = spec.partition("=")
+        if not ckpt:
+            raise SystemExit(f"--adapter wants USER=CKPT_DIR, got {spec!r}")
+        ad = adapters.import_checkpoint(user, ckpt)
+        users.append(user)
+        print(f"[serve] adapter {user!r}: {ad.n_steps} steps, "
+              f"{ad.nbytes} bytes")
+    if not users:
+        users = [None]                     # base weights only
+
+    engine = ServeEngine(cfg, adapters, n_slots=args.slots,
+                         max_len=args.prompt_len + args.gen,
+                         seed=args.seed)
+    rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
                            dtype=np.int32)
+    for i in range(args.requests):
+        engine.submit(Request(prompt=prompts[i], max_new=args.gen,
+                              user=users[i % len(users)],
+                              greedy=not args.sample, topk=args.topk,
+                              temperature=args.temperature))
     t0 = time.perf_counter()
-    toks = serve(cfg, params, prompts, args.gen)
+    completions = engine.run()
     dt = time.perf_counter() - t0
+    for c in completions:
+        tag = c.user if c.user is not None else "base"
+        print(f"[serve] rid={c.rid} user={tag}: {c.tokens.tolist()}")
+    st = engine.stats
     print(f"[serve] {args.requests} reqs x ({args.prompt_len} prompt + "
-          f"{args.gen} gen) in {dt:.2f}s")
-    print(toks)
+          f"{args.gen} gen) in {dt:.2f}s | prefill {st.prefill_tps:.0f} "
+          f"tok/s | decode {st.decode_tps:.0f} tok/s | "
+          f"adapter materializations: {adapters.stats['misses']} "
+          f"(hits {adapters.stats['hits']})")
 
 
 if __name__ == "__main__":

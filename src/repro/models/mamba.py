@@ -100,6 +100,26 @@ def mamba_init_state(cfg, bsz, d_model, dtype):
     }
 
 
+def mamba_prefill(cfg, p, state, x, d_model=None):
+    """Multi-token continuation: full-sequence mamba from an explicit
+    (conv, ssm) state, returning the state after the last token.
+    ``mamba_step`` is the S=1 special case; with a zero state this equals
+    ``mamba_apply`` (whose implicit conv padding is exactly the zero
+    conv window)."""
+    d_conv = cfg.mamba_d_conv
+    s = x.shape[1]
+    xz = L.dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                 # (B, S, di)
+    window = jnp.concatenate([state["conv"], xi], axis=1)
+    xc = sum(window[:, i:i + s, :] * p["conv_w"][i]
+             for i in range(d_conv)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, bmat, cmat = _ssm_inputs(cfg, p, xc, d_model)
+    y, h = _scan_ssm(p, xc, dt, bmat, cmat, h0=state["ssm"])
+    out = L.dense(p["out_proj"], y * jax.nn.silu(z))
+    return out, {"conv": window[:, s:, :], "ssm": h}
+
+
 def mamba_step(cfg, p, state, x, d_model=None):
     """Single decode step. x: (B, 1, D) -> (B, 1, D), updated state."""
     xz = L.dense(p["in_proj"], x)

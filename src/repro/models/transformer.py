@@ -7,6 +7,15 @@
   loss(params, batch)                -> scalar          (the ZO objective)
   init_cache(bsz)                    -> decode cache pytree
   decode_step(params, cache, tok, pos) -> (logits, cache)
+  prefill(params, cache, prompt)     -> (logits, cache)  (fused, optional)
+
+``prefill`` runs a whole (B, P) prompt in ONE call, writing cache
+positions [0, P) and returning the next-token logits (B, 1, V) -- the
+serving engine's replacement for P per-token ``decode_step`` dispatches.
+Families without a wired prefill leave it ``None`` (the engine falls
+back to the per-token loop). ``decode_step`` accepts ``pos`` as a scalar
+(whole batch at one position) or as a (B,) vector (continuous batching:
+every slot decodes at its own position).
 
 Layer stacks are ``lax.scan``-ed over stacked (L, ...) params so the HLO
 is O(1) in depth -- essential for compiling 61-layer 1T-param configs.
@@ -16,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +49,7 @@ class Model:
     loss: Callable
     init_cache: Callable
     decode_step: Callable
+    prefill: Optional[Callable] = None
 
 
 # ===========================================================================
@@ -188,24 +198,44 @@ def _lm_init_cache(cfg, bsz, max_len, dtype):
 
 
 def _decode_attn(cfg, p, x, ck, cv, pos):
-    """One-token attention against a (B, S_max, KV, hd) cache layer."""
+    """One-token attention against a (B, S_max, KV, hd) cache layer.
+
+    ``pos`` is a scalar (the whole batch decodes at one position) or a
+    (B,) vector (continuous batching: each slot at its own position)."""
     b = x.shape[0]
+    pos = jnp.asarray(pos)
     q, k, v = L.attn_project_qkv(cfg, p, x)       # (B,1,H,hd),(B,1,KV,hd)
     if cfg.pos == "rope":
-        cs = L.rope_cos_sin(jnp.full((b, 1), pos), cfg.resolved_head_dim,
+        pos_b = pos[:, None] if pos.ndim else jnp.full((b, 1), pos)
+        cs = L.rope_cos_sin(pos_b, cfg.resolved_head_dim,
                             cfg.rope_pct, cfg.rope_theta)
         q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
-    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos, 0, 0))
-    valid = (jnp.arange(ck.shape[1]) <= pos)[None, :]
+    if pos.ndim:
+        def upd(c, u, p_):
+            return jax.lax.dynamic_update_slice(c, u, (p_, 0, 0))
+        ck = jax.vmap(upd)(ck, k.astype(ck.dtype), pos)
+        cv = jax.vmap(upd)(cv, v.astype(cv.dtype), pos)
+        valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        valid = (jnp.arange(ck.shape[1]) <= pos)[None, :]
     out = L.attention(q, ck, cv, causal=False, kv_mask=valid, chunk=0)
     return L.dense(p["wo"], out.reshape(b, 1, -1)), ck, cv
+
+
+def _decode_positions(pos):
+    """Learned-pos embedding indices for a scalar or per-slot pos."""
+    pos = jnp.asarray(pos)
+    return pos[:, None] if pos.ndim else jnp.full((1,), pos)
 
 
 def _lm_decode_step(cfg, params, cache, tokens, pos):
     """tokens: (B, 1) -> logits (B, 1, V); cache updated at ``pos``."""
     x = L.embed_apply(cfg, params["embed"], tokens,
-                      positions=jnp.full((1,), pos))
+                      positions=_decode_positions(pos))
 
     def body(h, xs):
         bp, ck, cv = xs
@@ -224,6 +254,50 @@ def _lm_decode_step(cfg, params, cache, tokens, pos):
     x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
                                          cache["v"]))
     x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {"k": ck, "v": cv}
+
+
+def _prefill_attn(cfg, p, x, ck, cv, positions):
+    """Full-prompt attention that also writes positions [0, S) of a
+    (B, S_max, KV, hd) cache layer -- causal masking keeps every prompt
+    token's view identical to the per-token decode loop's."""
+    b, s, _ = x.shape
+    q, k, v = L.attn_project_qkv(cfg, p, x)
+    if cfg.pos == "rope":
+        cs = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_pct,
+                            cfg.rope_theta)
+        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+    out = L.attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    return L.dense(p["wo"], out.reshape(b, s, -1)), ck, cv
+
+
+def _lm_prefill(cfg, params, cache, tokens):
+    """Fused prefill: one jitted call over the whole (B, P) prompt writes
+    cache positions [0, P) and returns next-token logits (B, 1, V) --
+    P decode_step dispatches collapsed into one layer-scan."""
+    x = L.embed_apply(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None]
+
+    def body(h, xs):
+        bp, ck, cv = xs
+        a, ck, cv = _prefill_attn(cfg, bp["attn"],
+                                  L.norm_apply(cfg, bp["ln_attn"], h),
+                                  ck, cv, positions)
+        h = h + a
+        f = L.norm_apply(cfg, bp["ln_ffn"], h)
+        if cfg.n_experts:
+            fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
+            y, _ = fn(cfg, bp["moe"], f)
+        else:
+            y = L.mlp_apply(cfg, bp["mlp"], f)
+        return h + y, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    x = L.norm_apply(cfg, params["ln_f"], x[:, -1:])
     logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
     return logits, {"k": ck, "v": cv}
 
@@ -360,6 +434,47 @@ def _hybrid_decode_step(cfg, params, cache, tokens, pos):
     return logits, {"k": ck, "v": cv, "conv": conv, "ssm": ssm}
 
 
+def _hybrid_prefill(cfg, params, cache, tokens):
+    """Fused prefill for the hybrid family: attention sublayers write the
+    KV cache, mamba sublayers roll (conv, ssm) state to the last token."""
+    x = L.embed_apply(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None]
+
+    def body(h, xs):
+        bp, ck, cv, conv, ssm = xs
+        new_conv, new_ssm = [], []
+        mi = 0
+        for i in range(cfg.block_len):
+            sub = bp[f"sub_{i}"]
+            z = L.norm_apply(cfg, sub["ln"], h)
+            if i == cfg.attn_index:
+                a, ck, cv = _prefill_attn(cfg, sub["attn"], z, ck, cv,
+                                          positions)
+                h = h + a
+            else:
+                st = {"conv": conv[mi], "ssm": ssm[mi]}
+                y, st = M.mamba_prefill(cfg, sub["mamba"], st, z)
+                new_conv.append(st["conv"])
+                new_ssm.append(st["ssm"])
+                h = h + y
+                mi += 1
+            f = L.norm_apply(cfg, sub["ln_ffn"], h)
+            if "moe" in sub:
+                fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
+                y, _ = fn(cfg, sub["moe"], f)
+            else:
+                y = L.mlp_apply(cfg, sub["mlp"], f)
+            h = h + y
+        return h, (ck, cv, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+    x, (ck, cv, conv, ssm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["conv"],
+                  cache["ssm"]))
+    x = L.norm_apply(cfg, params["ln_f"], x[:, -1:])
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {"k": ck, "v": cv, "conv": conv, "ssm": ssm}
+
+
 # ===========================================================================
 # ssm (rwkv6)
 
@@ -430,6 +545,30 @@ def _rwkv_decode_step(cfg, params, cache, tokens, pos):
         body, x, (params["blocks"], cache["tm_state"], cache["tm_x"],
                   cache["cm_x"]))
     x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {"tm_state": st, "tm_x": tx, "cm_x": cx}
+
+
+def _rwkv_prefill(cfg, params, cache, tokens):
+    """Fused prefill for rwkv6: the full-sequence WKV scan started from
+    the cache state -- arithmetic-identical to per-token decode (the
+    recurrence is the same cell either way)."""
+    x = L.embed_apply(cfg, params["embed"], tokens)
+
+    def body(h, xs):
+        bp, st, tx, cx = xs
+        y, (st, tx) = R.timemix_apply(cfg, bp["tm"],
+                                      L.norm_apply(cfg, bp["ln1"], h),
+                                      state=st, x_prev=tx)
+        h = h + y
+        y, cx = R.channelmix_apply(cfg, bp["cm"],
+                                   L.norm_apply(cfg, bp["ln2"], h), x_prev=cx)
+        return h + y, (st, tx, cx)
+
+    x, (st, tx, cx) = jax.lax.scan(
+        body, x, (params["blocks"], cache["tm_state"], cache["tm_x"],
+                  cache["cm_x"]))
+    x = L.norm_apply(cfg, params["ln_f"], x[:, -1:])
     logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
     return logits, {"tm_state": st, "tm_x": tx, "cm_x": cx}
 
@@ -527,7 +666,7 @@ def _encdec_init_cache(cfg, bsz, max_len, dtype):
 
 def _encdec_decode_step(cfg, params, cache, tokens, pos):
     x = L.embed_apply(cfg, params["embed"], tokens,
-                      positions=jnp.full((1,), pos))
+                      positions=_decode_positions(pos))
 
     def body(h, xs):
         bp, ck, cv, xk, xv = xs
@@ -565,6 +704,7 @@ def build_model(cfg: ModelConfig) -> Model:
             init_cache=lambda bsz, max_len=None: _lm_init_cache(
                 cfg, bsz, max_len or cfg.max_seq, dtype),
             decode_step=partial(_lm_decode_step, cfg),
+            prefill=None if cfg.n_classes else partial(_lm_prefill, cfg),
         )
     if cfg.family == "encoder":
         return Model(
@@ -583,6 +723,7 @@ def build_model(cfg: ModelConfig) -> Model:
             init_cache=lambda bsz, max_len=None: _hybrid_init_cache(
                 cfg, bsz, max_len or cfg.max_seq, dtype),
             decode_step=partial(_hybrid_decode_step, cfg),
+            prefill=partial(_hybrid_prefill, cfg),
         )
     if cfg.family == "ssm":
         return Model(
@@ -592,6 +733,7 @@ def build_model(cfg: ModelConfig) -> Model:
             init_cache=lambda bsz, max_len=None: _rwkv_init_cache(
                 cfg, bsz, max_len or cfg.max_seq, dtype),
             decode_step=partial(_rwkv_decode_step, cfg),
+            prefill=partial(_rwkv_prefill, cfg),
         )
     if cfg.family == "encdec":
         return Model(

@@ -1,0 +1,290 @@
+"""Continuous-batching decode engine over per-user ZO adapters.
+
+A fixed table of ``n_slots`` sequence slots shares one batched decode
+cache. Requests queue up; whenever a slot is free the next request is
+admitted *mid-flight*: its adapter is materialized through the
+:class:`~repro.serve.adapters.AdapterStore`, its prompt is prefilled in
+one fused call (``model.prefill``; per-token fallback for families
+without one), and the resulting cache rows are scattered into the slot.
+Finished sequences free their slot on the spot -- the engine never
+drains the whole batch to admit new work.
+
+Every decode step advances ALL active slots one token, each at its own
+position (``decode_step`` takes a per-slot ``pos`` vector). Slots served
+by different adapters are handled with one decode dispatch per distinct
+active adapter, masked-merged into the shared cache -- compute cost per
+step scales with the number of *distinct* adapters in flight, the
+classic multi-model batching tradeoff (cf. S-LoRA-style adapter
+batching), except here an "adapter" is a replayed scalar log, not extra
+weights in the batch.
+
+MoE caveat: expert capacity is contended across the whole slot batch, so
+a slot's logits can depend on what its neighbors decode -- inherent to
+capacity-bounded MoE serving, not to this engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.serve import sampling
+from repro.serve.adapters import AdapterStore
+
+PyTree = Any
+
+# batch axis of each cache leaf, by family ({} -> every leaf on axis 1)
+_CACHE_BATCH_AXES: Dict[str, Dict[str, int]] = {
+    "hybrid": {"conv": 2, "ssm": 2},
+}
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request, tagged with the adapter that serves it."""
+    prompt: np.ndarray            # (P,) int32 token ids
+    max_new: int
+    user: Optional[str] = None    # adapter id; None -> base weights
+    greedy: bool = True
+    topk: int = 0                 # used when greedy=False
+    temperature: float = 1.0
+    rid: int = -1                 # assigned by submit()
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    user: Optional[str]
+    prompt: np.ndarray
+    tokens: np.ndarray            # (n_generated,) int32
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_tokens: int = 0
+    decode_s: float = 0.0
+    decode_steps: int = 0
+    admitted: int = 0
+    finished: int = 0
+
+    @property
+    def prefill_tps(self) -> float:
+        return self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+
+    @property
+    def decode_tps(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg, store: AdapterStore, n_slots: int = 4,
+                 max_len: Optional[int] = None, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        if self.model.decode_step is None:
+            raise ValueError(f"family {cfg.family!r} has no decode path")
+        self.store = store
+        self.n_slots = n_slots
+        self.max_len = max_len or cfg.max_seq
+        self.cache = self.model.init_cache(n_slots, self.max_len)
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = EngineStats()
+
+        self.queue: deque = deque()
+        self._next_rid = 0
+        self._req: List[Optional[Request]] = [None] * n_slots
+        self._active = np.zeros(n_slots, bool)
+        self._pos = np.zeros(n_slots, np.int32)
+        self._remaining = np.zeros(n_slots, np.int32)
+        self._last = np.zeros(n_slots, np.int32)
+        self._out: List[List[int]] = [[] for _ in range(n_slots)]
+        self._finished: List[Completion] = []
+
+        axes = _CACHE_BATCH_AXES.get(cfg.family, {})
+        baxes = {k: axes.get(k, 1) for k in self.cache}
+        decode_step = self.model.decode_step
+
+        # the slot-table cache is donated on every hot-path call: decode
+        # updates it in place instead of copying the full (n_slots,
+        # max_len) KV per token (the reference serve() loop donates too)
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_all(params, cache, toks, pos):
+            return decode_step(params, cache, toks, pos)
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_masked(params, cache, toks, pos, mask):
+            logits, new = decode_step(params, cache, toks, pos)
+            out = {}
+            for k in cache:
+                ax = baxes[k]
+                m = jnp.reshape(mask,
+                                (1,) * ax + (-1,) + (1,) * (cache[k].ndim
+                                                            - ax - 1))
+                out[k] = jnp.where(m, new[k], cache[k])
+            return logits, out
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def install(cache, prefill_cache, slot):
+            """Scatter a B=1 prefilled cache into slot row ``slot``."""
+            out = {}
+            for k in cache:
+                ax = baxes[k]
+                row = jnp.take(prefill_cache[k], 0, axis=ax)
+                c = jnp.moveaxis(cache[k], ax, 0)
+                out[k] = jnp.moveaxis(c.at[slot].set(row.astype(c.dtype)),
+                                      0, ax)
+            return out
+
+        self._decode_all = decode_all
+        self._decode_masked = decode_masked
+        self._install = install
+        self._prefill = (jax.jit(self.model.prefill, donate_argnums=(1,))
+                         if self.model.prefill is not None else None)
+        self._decode_one = jax.jit(decode_step,   # per-token prefill fallback
+                                   donate_argnums=(1,))
+
+    # ---- request lifecycle ----------------------------------------------
+    def submit(self, req: Request) -> int:
+        plen = int(np.asarray(req.prompt).size)
+        if plen + req.max_new > self.max_len:
+            raise ValueError(f"prompt({plen}) + max_new({req.max_new}) "
+                             f"exceeds max_len({self.max_len})")
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.n_slots) if not self._active[i]]
+
+    def _admit(self):
+        """Prefill queued requests into free slots (mid-flight)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.popleft()
+            params = self.store.materialize(req.user)
+            prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
+            plen = prompt.shape[1]
+            t0 = time.perf_counter()
+            fresh = self.model.init_cache(1, self.max_len)
+            if self._prefill is not None:
+                logits, fresh = self._prefill(params, fresh,
+                                              jnp.asarray(prompt))
+            else:
+                toks = jnp.asarray(prompt)
+                for t in range(plen):
+                    logits, fresh = self._decode_one(params, fresh,
+                                                     toks[:, t:t + 1],
+                                                     jnp.int32(t))
+            self.cache = self._install(self.cache, fresh, slot)
+            jax.block_until_ready(self.cache)
+            self.stats.prefill_s += time.perf_counter() - t0
+            self.stats.prefill_tokens += plen
+            self.stats.admitted += 1
+
+            self.key, sub = jax.random.split(self.key)
+            tok = self._pick(req, jax.random.fold_in(sub, slot),
+                             np.asarray(logits[:, -1, :], np.float32)[0])
+            self._req[slot] = req
+            self._active[slot] = True
+            self._pos[slot] = plen
+            self._remaining[slot] = req.max_new - 1
+            self._last[slot] = tok
+            self._out[slot] = [tok]
+            if self._remaining[slot] == 0:
+                self._finish(slot)
+
+    def _pick(self, req: Request, key, logits_row: np.ndarray) -> int:
+        if req.greedy:
+            return int(logits_row.argmax())
+        tok = sampling.sample_topk(key[None], jnp.asarray(logits_row)[None],
+                                   req.topk or logits_row.size,
+                                   req.temperature)
+        return int(np.asarray(tok)[0])
+
+    def _finish(self, slot: int):
+        req = self._req[slot]
+        self._finished.append(Completion(
+            rid=req.rid, user=req.user, prompt=np.asarray(req.prompt),
+            tokens=np.asarray(self._out[slot], np.int32)))
+        self._active[slot] = False
+        self._req[slot] = None
+        self.stats.finished += 1
+
+    # ---- decode ---------------------------------------------------------
+    def step(self):
+        """Admit whatever fits, then advance every active slot one token."""
+        self._admit()
+        if not self._active.any():
+            return
+        t0 = time.perf_counter()
+        toks = jnp.asarray(self._last.reshape(self.n_slots, 1))
+        pos = jnp.asarray(np.minimum(self._pos, self.max_len - 1))
+        users = {self._req[i].user for i in range(self.n_slots)
+                 if self._active[i]}
+        merged = np.zeros((self.n_slots, self.cfg.vocab), np.float32)
+        if len(users) == 1:
+            params = self.store.materialize(next(iter(users)))
+            lg, self.cache = self._decode_all(params, self.cache, toks, pos)
+            merged[:] = np.asarray(lg[:, -1, :], np.float32)
+        else:
+            for u in users:
+                mask = np.array([self._active[i]
+                                 and self._req[i].user == u
+                                 for i in range(self.n_slots)])
+                params = self.store.materialize(u)
+                lg, self.cache = self._decode_masked(
+                    params, self.cache, toks, pos, jnp.asarray(mask))
+                merged[mask] = np.asarray(lg[:, -1, :], np.float32)[mask]
+
+        self.key, keys = sampling.step_keys(self.key, self.n_slots)
+        n_active = int(self._active.sum())
+        picked: Dict[int, int] = {}
+        groups: Dict[tuple, List[int]] = {}   # (topk, temp) -> slots
+        for slot in np.flatnonzero(self._active):
+            req = self._req[slot]
+            if req.greedy:
+                picked[slot] = int(merged[slot].argmax())
+            else:
+                groups.setdefault((req.topk or self.cfg.vocab,
+                                   req.temperature), []).append(int(slot))
+        for (k, temp), slots in groups.items():   # one dispatch per combo
+            toks_s = sampling.sample_topk(keys[np.asarray(slots)],
+                                          jnp.asarray(merged[slots]), k, temp)
+            picked.update(zip(slots, np.asarray(toks_s).tolist()))
+        for slot, tok in picked.items():
+            self._out[slot].append(tok)
+            self._last[slot] = tok
+            self._pos[slot] += 1
+            self._remaining[slot] -= 1
+            if (self._remaining[slot] == 0
+                    or self._pos[slot] >= self.max_len - 1):
+                self._finish(slot)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_tokens += n_active
+        self.stats.decode_steps += 1
+
+    def drain_finished(self) -> List[Completion]:
+        out, self._finished = self._finished, []
+        return out
+
+    def run(self) -> List[Completion]:
+        """Serve until queue and slots are empty; completions rid-sorted."""
+        out: List[Completion] = []
+        while self.queue or self._active.any():
+            self.step()
+            out.extend(self.drain_finished())
+        return sorted(out, key=lambda c: c.rid)

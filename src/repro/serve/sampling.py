@@ -1,0 +1,46 @@
+"""Per-slot token sampling: greedy and seeded top-k.
+
+The engine owns ONE PRNG key and splits it per decode step; the step key
+is folded with the slot index so every slot draws from an independent
+stream. This replaces the old ``PRNGKey(loop_index)`` pattern, which
+rebuilt the key from the step counter -- identical across runs and
+correlated across requests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def step_keys(key, n_slots: int):
+    """Advance the engine key one step; returns (new_key, (n_slots, ...)
+    per-slot keys)."""
+    key, sub = jax.random.split(key)
+    slot_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        sub, jnp.arange(n_slots, dtype=jnp.uint32))
+    return key, slot_keys
+
+
+def greedy(logits):
+    """logits: (B, V) -> (B,) argmax tokens."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def sample_topk(keys, logits, k: int, temperature=1.0):
+    """Seeded top-k sampling, vectorized over slots.
+
+    keys: (B, ...) per-slot keys (from :func:`step_keys`); logits: (B, V).
+    Renormalizes over the k largest logits, scaled by ``temperature``.
+    """
+    k = max(1, min(k, logits.shape[-1]))
+    vals, idx = jax.lax.top_k(logits.astype(jnp.float32), k)
+    t = jnp.maximum(jnp.float32(temperature), 1e-6)
+
+    def one(kk, vv, ii):
+        return ii[jax.random.categorical(kk, vv / t)]
+
+    return jax.vmap(one)(keys, vals, idx).astype(jnp.int32)

@@ -57,8 +57,32 @@ def test_replay_log_torn_tail(tmp_path):
     log.close()
     with open(path, "a") as f:
         f.write('{"step": 1, "seed": 2, "gs"')  # torn write
-    recs = ReplayLog.read(path)
+    with pytest.warns(RuntimeWarning, match="dropped 1 corrupt"):
+        recs = ReplayLog.read(path)
     assert len(recs) == 1 and recs[0]["step"] == 0
+
+
+def test_replay_log_torn_middle_recovers_tail(tmp_path):
+    """A crash mid-append followed by a restart leaves a corrupt line in
+    the MIDDLE of the log (the restart retries the step and keeps
+    appending). read() must warn with the drop count and keep everything
+    valid -- including records after the tear -- with the retried step
+    deduplicated."""
+    path = str(tmp_path / "log.jsonl")
+    log = ReplayLog(path)
+    log.append(0, 1, [0.5], 1e-3, 1e-2)
+    log.close()
+    with open(path, "a") as f:
+        f.write('{"step": 1, "seed": 2, "gs"')        # torn write (crash),
+    log = ReplayLog(path)          # NO trailing newline; restart must seal
+    log.append(1, 2, [0.25], 1e-3, 1e-2)              # retried step
+    log.append(1, 2, [0.25], 1e-3, 1e-2)              # duplicate retry
+    log.append(2, 3, [0.125], 1e-3, 1e-2)
+    log.close()
+    with pytest.warns(RuntimeWarning, match="dropped 1 corrupt"):
+        recs = ReplayLog.read(path)
+    assert [r["step"] for r in recs] == [0, 1, 2]
+    assert recs[1]["gs"] == [0.25]
 
 
 def test_replay_log_dedup(tmp_path):
