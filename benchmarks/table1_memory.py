@@ -7,7 +7,11 @@ container/TPU target:
       (the paper's exact axis: MeZO flat in batch, Adam grows),
   (b) analytic state bytes at FULL RoBERTa-large / OPT-1.3B scale
       (params/grads/moments/activations model),
-  (c) per-device compiled bytes from dry-run JSONs when present.
+  (c) per-device compiled bytes from dry-run JSONs when present,
+  (d) the ``fused_families`` arm: compiled peak live-buffer bytes of the
+      ZO loss for the families the block-registry runtime moved off the
+      transient-materialize fallback (hybrid, rwkv6, encdec) -- fused
+      in-place perturbation vs. an explicit theta+eps*z copy.
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import MezoConfig, mezo_step
+from repro.core import MezoConfig, PerturbCtx, mezo_step
 from repro.data.synthetic import lm_batch_at, synthetic_lm_corpus
 from repro.models import build_model
 from repro.optim.adam import AdamConfig, adam_init, grad_train_step
@@ -68,6 +72,78 @@ def analytic_state_gb(arch: str, batch: int, seq: int, optimizer: str):
     return (n * (bp + bp + 8) + act_per_layer * layers) / 1e9
 
 
+# deep enough that the layer scan is a real loop: with a length-1 scan
+# XLA inlines the body and fuses the transient perturbed copies into
+# their consumers, hiding exactly the cost this arm measures
+FUSED_FAMILY_ARCHS = {
+    "jamba-v0.1-52b": dict(n_layers=8),          # 2 super-blocks
+    "rwkv6-7b": dict(n_layers=4),
+    "whisper-base": dict(enc_layers=2, dec_layers=2),
+}
+
+
+def fused_families(rows, table):
+    """Peak live-buffer bytes of the ZO loss, fused vs materialize.
+
+    Two views per family, both committed to the JSON:
+      * measured: ``live = argument + temp`` from the compiled memory
+        analysis -- the materialize arm's temp holds the transient
+        theta+eps*z copies of every scan-stacked leaf, the fused arm's
+        does not (z is regenerated at each use site);
+      * weight-resident: params vs params + perturbable-leaf copy (the
+        paper's Sec 3.3 accounting) -- the fused path fine-tunes at
+        inference weight memory, the materialize path at ~2x.
+    """
+    for arch, depth in FUSED_FAMILY_ARCHS.items():
+        cfg = get_config(arch).reduced(**depth)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {k: jnp.asarray(v) for k, v in
+                 lm_batch_at(0, 2, 32, cfg.vocab,
+                             synthetic_lm_corpus(2 * 40 * 33, cfg.vocab,
+                                                 0)).items()}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(1), (2, cfg.enc_len, cfg.d_model))
+        ctx = PerturbCtx(seed=jnp.uint32(7), coeff=jnp.float32(1e-3))
+        param_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(params))
+
+        def loss_fused(p, b):
+            return model.loss(p, b, perturb=ctx)
+
+        def loss_materialize(p, b):
+            return model.loss(ctx.materialize(p), b)
+
+        live = {}
+        for name, fn in (("fused", loss_fused),
+                         ("materialize", loss_materialize)):
+            ma = jax.jit(fn).lower(params, batch).compile().memory_analysis()
+            live[name] = int(ma.argument_size_in_bytes
+                             + ma.temp_size_in_bytes)
+            table[f"fused_families/{arch}/{name}"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "live_peak_bytes": live[name],
+            }
+        ratio = live["fused"] / max(live["materialize"], 1)
+        # weight-resident accounting: the materialize arm's extra temp is
+        # the transient perturbed parameter copy, so weight bytes are
+        # params (fused) vs params + copy (materialize)
+        copy_bytes = max(
+            table[f"fused_families/{arch}/materialize"]["temp_bytes"]
+            - table[f"fused_families/{arch}/fused"]["temp_bytes"], 0)
+        wratio = param_bytes / max(param_bytes + copy_bytes, 1)
+        table[f"fused_families/{arch}/param_bytes"] = param_bytes
+        table[f"fused_families/{arch}/fused_over_materialize"] = ratio
+        table[f"fused_families/{arch}/weight_bytes"] = {
+            "fused": param_bytes, "materialize": param_bytes + copy_bytes,
+            "fused_over_materialize": wratio}
+        rows.append((f"table1/fused_families/{arch}", 0.0,
+                     f"fused_live={live['fused']};"
+                     f"materialize_live={live['materialize']};"
+                     f"live_ratio={ratio:.2f};weight_ratio={wratio:.2f}"))
+
+
 def run(out_dir="experiments/bench"):
     os.makedirs(out_dir, exist_ok=True)
     rows = []
@@ -111,6 +187,11 @@ def run(out_dir="experiments/bench"):
                 rows.append((f"table1/dryrun/{rec['arch']}/"
                              f"{rec.get('optimizer')}", 0.0,
                              f"arg_gb={arg/1e9:.2f};temp_gb={tmp/1e9:.2f}"))
+
+    # (d) fused-vs-materialize compiled live bytes per newly-fused family
+    # (AFTER the RSS arm: compiling six loss programs here first would
+    # raise the process ru_maxrss floor that arm (a) reads)
+    fused_families(rows, table)
 
     with open(os.path.join(out_dir, "table1_memory.json"), "w") as f:
         json.dump(table, f, indent=1)

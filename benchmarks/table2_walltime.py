@@ -151,6 +151,41 @@ def run(out_dir="experiments/bench"):
     table["chunked"] = {"chunk_steps": chunk, "steps_per_sec": sps,
                         "stepwise_steps_per_sec": 1e6 / table[f"mezo/bs{bs}"]}
 
+    # per-family fused arms: the block-registry runtime extends the fused
+    # perturbed forward to hybrid / rwkv6 / encdec (previously a transient
+    # materialize fallback), so every family now has a 0-sweep step; time
+    # it against vmapdir (the old fallback's memory/compute profile)
+    for arch in ("jamba-v0.1-52b", "rwkv6-7b", "whisper-base"):
+        fcfg2 = get_config(arch).reduced()
+        fmodel = build_model(fcfg2)
+        fparams = fmodel.init(jax.random.PRNGKey(0))
+        fstream = synthetic_lm_corpus(8 * 40 * 33, fcfg2.vocab, 0)
+
+        def fam_batch(t):
+            b = {k: jnp.asarray(v) for k, v in
+                 lm_batch_at(t, 8, 32, fcfg2.vocab, fstream).items()}
+            if fcfg2.family == "encdec":
+                b["enc_embeds"] = jax.random.normal(
+                    jax.random.PRNGKey(t), (8, fcfg2.enc_len, fcfg2.d_model))
+            return b
+
+        famcfg = MezoConfig(eps=1e-3, lr=1e-5, n_directions=1)
+        for strat_name, step_fn in (("fused", mezo_step_fused),
+                                    ("vmapdir", mezo_step_vmapdir)):
+            fs = {"p": jax.tree.map(jnp.copy, fparams)}
+
+            def fam_fn(t, fs=fs, step_fn=step_fn):
+                fs["p"], _ = step_fn(fmodel.loss, fs["p"], fam_batch(t),
+                                     jnp.uint32(t), famcfg)
+                jax.block_until_ready(jax.tree.leaves(fs["p"])[0])
+
+            us = _time_steps(fam_fn, n=3)
+            rows.append((f"table2/family_{strat_name}/{arch}", us,
+                         f"{fcfg2.family} fused ZO arm"
+                         if strat_name == "fused" else
+                         f"{fcfg2.family} transient-copy baseline"))
+            table[f"family/{arch}/{strat_name}"] = us
+
     # K of the bs arms above (counts scale linearly in K)
     table["param_sweeps_per_step"] = {
         s: param_sweeps_per_step(s, bs_k)

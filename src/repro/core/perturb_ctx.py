@@ -126,8 +126,10 @@ class PerturbCtx:
     def materialize(self, subtree: PyTree, name: str = "") -> PyTree:
         """Perturb every leaf of a param subtree transiently.
 
-        Generic fallback for components without a fused path (MoE experts,
-        mamba/rwkv mixers, or -- scoped at the root -- a whole model).
+        Generic fallback for components without a per-leaf fused path --
+        today only MoE expert sub-dicts (stacked 3/4-D leaves consumed
+        inside sort-based dispatch) -- and, scoped at the root, the
+        parity oracle the tests evaluate the fused forward against.
         Equivalent to ``add_scaled_z`` restricted to the subtree: one
         transient copy of the subtree, no walk sweeps.
         """

@@ -64,9 +64,25 @@ def serve(cfg, params, prompts: np.ndarray, gen: int, greedy: bool = True,
     return np.concatenate(out, axis=1)[:, :gen]
 
 
+# one representative arch per decode-capable family -- the smoke path for
+# "does family X serve end-to-end?" (--family encdec exercises the
+# enc-dec fused prefill the block-registry runtime added)
+FAMILY_ARCHS = {
+    "dense": "gemma-2b",
+    "moe": "granite-moe-1b-a400m",
+    "hybrid": "jamba-v0.1-52b",
+    "ssm": "rwkv6-7b",
+    "encdec": "whisper-base",
+}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=ALL_ARCHS)
+    ap.add_argument("--family", default=None, choices=sorted(FAMILY_ARCHS),
+                    help="serve this family's representative arch "
+                         "(overrides --arch): " + ", ".join(
+                             f"{f}={a}" for f, a in FAMILY_ARCHS.items()))
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None,
                     help="load BASE params from this checkpoint dir")
@@ -93,6 +109,8 @@ def main():
                     help="adapter-store byte budget for materialized trees")
     args = ap.parse_args()
 
+    if args.family:
+        args.arch = FAMILY_ARCHS[args.family]
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

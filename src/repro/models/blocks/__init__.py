@@ -1,0 +1,17 @@
+"""Block registry: every mixer/FFN behind one protocol (see base.py).
+
+Importing this package registers the built-in block types; family
+assembly (`repro.models.transformer`) and the generic backbone engine
+(`repro.models.runtime`) resolve them by name.
+"""
+
+from repro.models.blocks.base import (BlockType, RunCtx, block_names,
+                                      get_block, register_block)
+from repro.models.blocks import attention as _attention          # noqa: F401
+from repro.models.blocks import cross_attention as _cross        # noqa: F401
+from repro.models.blocks import ffn as _ffn                      # noqa: F401
+from repro.models.blocks import mamba as _mamba                  # noqa: F401
+from repro.models.blocks import rwkv as _rwkv                    # noqa: F401
+
+__all__ = ["BlockType", "RunCtx", "block_names", "get_block",
+           "register_block"]

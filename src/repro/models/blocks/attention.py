@@ -1,0 +1,75 @@
+"""Self-attention block: GQA/MQA attention over a (B, S_max, KV, hd)
+KV cache. Full-sequence apply wraps :func:`repro.models.layers.attn_apply`
+(fused-ZO aware); prefill writes cache positions [0, P) in one
+``dynamic_update_slice``; decode updates position ``pos`` (scalar, or a
+per-slot (B,) vector for continuous batching)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.blocks.base import BlockType, register_block
+
+
+def _apply(cfg, p, x, rc, ctx=None, causal=None):
+    y = L.attn_apply(cfg, p, x, positions=rc.positions, kv_mask=rc.kv_mask,
+                     causal=causal, ctx=ctx)
+    return y, jnp.float32(0.0)
+
+
+def _state_spec(cfg, bsz, max_len, dtype):
+    shape = (bsz, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return {"k": (shape, dtype), "v": (shape, dtype)}
+
+
+def _decode_step(cfg, p, state, x, rc, ctx=None, causal=None):
+    """One-token attention against the cache layer. ``rc.pos`` is a
+    scalar (the whole batch decodes at one position) or a (B,) vector
+    (continuous batching: each slot at its own position)."""
+    ck, cv = state["k"], state["v"]
+    b = x.shape[0]
+    pos = jnp.asarray(rc.pos)
+    q, k, v = L.attn_project_qkv(cfg, p, x)       # (B,1,H,hd),(B,1,KV,hd)
+    if cfg.pos == "rope":
+        pos_b = pos[:, None] if pos.ndim else jnp.full((b, 1), pos)
+        cs = L.rope_cos_sin(pos_b, cfg.resolved_head_dim,
+                            cfg.rope_pct, cfg.rope_theta)
+        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
+    if pos.ndim:
+        def upd(c, u, p_):
+            return jax.lax.dynamic_update_slice(c, u, (p_, 0, 0))
+        ck = jax.vmap(upd)(ck, k.astype(ck.dtype), pos)
+        cv = jax.vmap(upd)(cv, v.astype(cv.dtype), pos)
+        valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        valid = (jnp.arange(ck.shape[1]) <= pos)[None, :]
+    out = L.attention(q, ck, cv, causal=False, kv_mask=valid, chunk=0)
+    return L.dense(p["wo"], out.reshape(b, 1, -1)), {"k": ck, "v": cv}
+
+
+def _prefill(cfg, p, state, x, rc, ctx=None, causal=None):
+    """Full-prompt attention that also writes positions [0, S) of the
+    cache layer -- causal masking keeps every prompt token's view
+    identical to the per-token decode loop's."""
+    ck, cv = state["k"], state["v"]
+    b, s, _ = x.shape
+    q, k, v = L.attn_project_qkv(cfg, p, x)
+    if cfg.pos == "rope":
+        cs = L.rope_cos_sin(rc.positions, cfg.resolved_head_dim,
+                            cfg.rope_pct, cfg.rope_theta)
+        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+    out = L.attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    return L.dense(p["wo"], out.reshape(b, s, -1)), {"k": ck, "v": cv}
+
+
+ATTENTION = register_block(BlockType(
+    name="attention", init=L.attn_init, apply=_apply,
+    state_spec=_state_spec, prefill=_prefill, decode_step=_decode_step))

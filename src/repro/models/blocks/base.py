@@ -1,0 +1,85 @@
+"""The Block protocol and registry -- one contract for every mixer/FFN.
+
+A *block* is the unit the generic backbone engine
+(:mod:`repro.models.runtime`) composes: attention, MLP, MoE, mamba,
+rwkv time-mix/channel-mix, cross-attention. Each block implements the
+same five-slot protocol over plain param dicts:
+
+  init(cfg, key)                     -> params          (leaf layout)
+  apply(cfg, p, x, rc, ctx)          -> (y, aux)        (full sequence)
+  state_spec(cfg, bsz, max_len, dt)  -> {name: (shape, dtype)}
+  prefill(cfg, p, state, x, rc)      -> (y, new_state)  (multi-token)
+  decode_step(cfg, p, state, x, rc)  -> (y, new_state)  (one token)
+
+Conventions:
+
+* the runtime owns the residual pattern -- ``apply`` receives the
+  *normed* input and returns only the branch output ``y`` (plus an aux
+  scalar, 0 for everything but MoE load balancing);
+* ``ctx`` is an optional :class:`~repro.core.perturb_ctx.PerturbCtx`
+  already scoped to this block's param sub-dict -- threading it through
+  ``apply`` is what gives every family the fused ZO perturbed forward;
+* ``rc`` (:class:`RunCtx`) carries the per-call tensors a block may
+  need: positions, the decode position, a KV validity mask, the encoder
+  output for cross-attention;
+* ``state_spec`` declares per-layer decode state as ``{name: (shape,
+  dtype)}`` *without* the layer axis -- the runtime stacks each leaf to
+  ``(n_layers, B, ...)``, so every StateCache leaf in every family has
+  the batch on axis 1 (the invariant `serve/engine.py` relies on);
+* ``mutable_state=False`` marks state that decode reads but never
+  writes (cross-attention K/V): the runtime keeps the original buffers
+  instead of copying them through the layer scan every token.
+
+Stateless blocks (MLP, MoE) leave the state slots ``None``; the runtime
+calls ``apply`` in every mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Per-call inputs shared by every block of a stack (all optional)."""
+    positions: Any = None      # (B, S) int positions (full / prefill)
+    pos: Any = None            # scalar or (B,) decode position
+    kv_mask: Any = None        # (B, T) key-validity mask (full mode)
+    enc_out: Any = None        # (B, T_enc, D) encoder output (cross-attn)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockType:
+    name: str
+    init: Callable                       # (cfg, key) -> params
+    apply: Callable                      # (cfg, p, x, rc, ctx=, **opts)
+    state_spec: Optional[Callable] = None
+    prefill: Optional[Callable] = None   # (cfg, p, state, x, rc, **opts)
+    decode_step: Optional[Callable] = None
+    mutable_state: bool = True
+
+    @property
+    def stateful(self) -> bool:
+        return self.state_spec is not None
+
+
+_BLOCKS: Dict[str, BlockType] = {}
+
+
+def register_block(bt: BlockType) -> BlockType:
+    _BLOCKS[bt.name] = bt
+    return bt
+
+
+def get_block(name: str) -> BlockType:
+    if name not in _BLOCKS:
+        raise ValueError(f"unknown block type {name!r}; "
+                         f"registered: {block_names()}")
+    return _BLOCKS[name]
+
+
+def block_names():
+    return sorted(_BLOCKS)

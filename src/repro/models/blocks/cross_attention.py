@@ -1,0 +1,50 @@
+"""Decoder cross-attention block (encoder-decoder / whisper).
+
+Full-sequence apply projects K/V from ``rc.enc_out`` on the fly (ZO
+perturbation included via ctx); decode/prefill instead read ``(xk, xv)``
+from the block's state and *never write* it (``mutable_state=False``
+keeps the runtime from copying it through the layer scan every token).
+A caller with encoder output populates the state via ``cross_kv`` per
+layer; the serving engine currently admits token-only requests, so its
+cross state stays at ``init_cache``'s zeros (decode then conditions on
+tokens alone -- same as the per-token reference loop)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.perturb_ctx import sub as _sub
+from repro.models import layers as L
+from repro.models.blocks.base import BlockType, register_block
+
+
+def cross_kv(cfg, p, enc_out, ctx=None):
+    """Project encoder output to this layer's cross K/V."""
+    b, t, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = L.dense(p["wk"], enc_out, _sub(ctx, "wk")).reshape(
+        b, t, cfg.n_kv_heads, hd)
+    v = L.dense(p["wv"], enc_out, _sub(ctx, "wv")).reshape(
+        b, t, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _apply(cfg, p, x, rc, ctx=None):
+    kv = cross_kv(cfg, p, rc.enc_out, ctx)
+    return L.cross_attn_apply(cfg, p, x, kv, ctx=ctx), jnp.float32(0.0)
+
+
+def _state_spec(cfg, bsz, max_len, dtype):
+    shape = (bsz, cfg.enc_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return {"xk": (shape, dtype), "xv": (shape, dtype)}
+
+
+def _from_state(cfg, p, state, x, rc, ctx=None):
+    y = L.cross_attn_apply(cfg, p, x, (state["xk"], state["xv"]))
+    return y, state
+
+
+CROSS_ATTENTION = register_block(BlockType(
+    name="cross_attention", init=L.attn_init, apply=_apply,
+    state_spec=_state_spec, prefill=_from_state, decode_step=_from_state,
+    mutable_state=False))

@@ -1,0 +1,32 @@
+"""FFN blocks: dense MLP and top-k MoE.
+
+Both are stateless -- the runtime calls ``apply`` in every mode. The MoE
+block is the one place the fused ZO path still takes a *scoped* transient
+copy (``ctx.materialize`` of the expert sub-dict): expert weights are
+3/4-D stacked leaves consumed inside sort-based dispatch, so there is no
+2-D use site to fuse into. That copy is per-block, per-layer-slice --
+never the whole model."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MoE
+from repro.models.blocks.base import BlockType, register_block
+
+
+def _mlp_apply(cfg, p, x, rc, ctx=None):
+    return L.mlp_apply(cfg, p, x, ctx), jnp.float32(0.0)
+
+
+def _moe_apply(cfg, p, x, rc, ctx=None):
+    fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
+    moe_p = p if ctx is None else ctx.materialize(p)
+    return fn(cfg, moe_p, x)
+
+
+MLP = register_block(BlockType(name="mlp", init=L.mlp_init,
+                               apply=_mlp_apply))
+MOE = register_block(BlockType(name="moe", init=MoE.moe_init,
+                               apply=_moe_apply))

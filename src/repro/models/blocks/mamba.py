@@ -1,0 +1,33 @@
+"""Mamba (selective SSM) block -- the recurrent sublayer of the hybrid
+family. State is (conv window, ssm accumulator); prefill rolls both to
+the last token with one full-sequence scan."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import mamba as M
+from repro.models.blocks.base import BlockType, register_block
+
+
+def _apply(cfg, p, x, rc, ctx=None):
+    return M.mamba_apply(cfg, p, x, ctx=ctx), jnp.float32(0.0)
+
+
+def _state_spec(cfg, bsz, max_len, dtype):
+    di = cfg.mamba_expand * cfg.d_model
+    return {"conv": ((bsz, cfg.mamba_d_conv - 1, di), dtype),
+            "ssm": ((bsz, di, cfg.mamba_d_state), jnp.float32)}
+
+
+def _decode_step(cfg, p, state, x, rc, ctx=None):
+    return M.mamba_step(cfg, p, state, x)
+
+
+def _prefill(cfg, p, state, x, rc, ctx=None):
+    return M.mamba_prefill(cfg, p, state, x)
+
+
+MAMBA = register_block(BlockType(
+    name="mamba", init=M.mamba_init, apply=_apply,
+    state_spec=_state_spec, prefill=_prefill, decode_step=_decode_step))

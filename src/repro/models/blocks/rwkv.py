@@ -1,0 +1,51 @@
+"""RWKV-6 blocks: time-mix (the WKV linear-attention mixer) and
+channel-mix (the squared-ReLU FFN). Both carry a token-shift buffer;
+time-mix additionally carries the (H, hd, hd) WKV accumulator. The
+full-sequence scan and the per-token cell are the same recurrence, so
+prefill and decode share one implementation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import rwkv6 as R
+from repro.models.blocks.base import BlockType, register_block
+
+
+def _tm_apply(cfg, p, x, rc, ctx=None):
+    y, _ = R.timemix_apply(cfg, p, x, ctx=ctx)
+    return y, jnp.float32(0.0)
+
+
+def _tm_state_spec(cfg, bsz, max_len, dtype):
+    h, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {"state": ((bsz, h, hd, hd), jnp.float32),
+            "x_prev": ((bsz, 1, cfg.d_model), dtype)}
+
+
+def _tm_step(cfg, p, state, x, rc, ctx=None):
+    y, (st, xl) = R.timemix_apply(cfg, p, x, state=state["state"],
+                                  x_prev=state["x_prev"])
+    return y, {"state": st, "x_prev": xl}
+
+
+def _cm_apply(cfg, p, x, rc, ctx=None):
+    y, _ = R.channelmix_apply(cfg, p, x, ctx=ctx)
+    return y, jnp.float32(0.0)
+
+
+def _cm_state_spec(cfg, bsz, max_len, dtype):
+    return {"x_prev": ((bsz, 1, cfg.d_model), dtype)}
+
+
+def _cm_step(cfg, p, state, x, rc, ctx=None):
+    y, xl = R.channelmix_apply(cfg, p, x, x_prev=state["x_prev"])
+    return y, {"x_prev": xl}
+
+
+RWKV_TIMEMIX = register_block(BlockType(
+    name="rwkv_timemix", init=R.timemix_init, apply=_tm_apply,
+    state_spec=_tm_state_spec, prefill=_tm_step, decode_step=_tm_step))
+RWKV_CHANNELMIX = register_block(BlockType(
+    name="rwkv_channelmix", init=R.channelmix_init, apply=_cm_apply,
+    state_spec=_cm_state_spec, prefill=_cm_step, decode_step=_cm_step))

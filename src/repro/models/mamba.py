@@ -3,6 +3,12 @@
 Forward-only selective scan via ``lax.scan`` over time (ZO fine-tuning
 never backprops through the scan, so no remat policy is needed -- see
 DESIGN.md Sec 5). Decode carries (conv_state, ssm_state) explicitly.
+
+The full-sequence apply threads an optional ``PerturbCtx``: every weight
+use applies ``coeff*z`` in place (dense projections via ``ctx``-aware
+``L.dense``, conv/SSM leaves via transient ``ctx.perturb``), which is
+what lets the hybrid family run the fused ZO loss with zero transient
+parameter copies.
 """
 
 from __future__ import annotations
@@ -10,7 +16,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.perturb_ctx import sub as _sub
 from repro.models import layers as L
+
+
+def _leaf(p, name, ctx):
+    """p[name] + coeff*z under a ctx; the bare leaf without one."""
+    return p[name] if ctx is None else ctx.perturb(name, p[name])
 
 
 def _dims(cfg, d_model=None):
@@ -41,20 +53,22 @@ def mamba_init(cfg, key, d_model=None):
     }
 
 
-def _ssm_inputs(cfg, p, xc, d_model=None):
+def _ssm_inputs(cfg, p, xc, d_model=None, ctx=None):
     """xc: (B, S, di) post-conv. Returns dt, Bmat, Cmat (f32)."""
     _, _, dtr = _dims(cfg, d_model)
     n = cfg.mamba_d_state
-    proj = L.dense(p["x_proj"], xc).astype(jnp.float32)
+    proj = L.dense(p["x_proj"], xc, _sub(ctx, "x_proj")).astype(jnp.float32)
     dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
-    dt = jax.nn.softplus(dt_raw @ p["dt_proj"]["w"].astype(jnp.float32)
-                         + p["dt_proj"]["b"].astype(jnp.float32))
+    dtp = _sub(ctx, "dt_proj")
+    dt = jax.nn.softplus(dt_raw @ _leaf(p["dt_proj"], "w",
+                                        dtp).astype(jnp.float32)
+                         + _leaf(p["dt_proj"], "b", dtp).astype(jnp.float32))
     return dt, bmat, cmat
 
 
-def _scan_ssm(p, xc, dt, bmat, cmat, h0=None):
+def _scan_ssm(p, xc, dt, bmat, cmat, h0=None, ctx=None):
     """Selective scan. xc: (B,S,di); dt: (B,S,di); b/c: (B,S,n)."""
-    a = -jnp.exp(p["A_log"])                       # (di, n)
+    a = -jnp.exp(_leaf(p, "A_log", ctx))           # (di, n)
     bsz, _, di = xc.shape
     n = a.shape[-1]
     h0 = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None else h0
@@ -70,26 +84,27 @@ def _scan_ssm(p, xc, dt, bmat, cmat, h0=None):
     xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
           bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
     h, ys = jax.lax.scan(step, h0, xs)
-    y = ys.transpose(1, 0, 2) + xc.astype(jnp.float32) * p["D"]
+    y = ys.transpose(1, 0, 2) + xc.astype(jnp.float32) * _leaf(p, "D", ctx)
     return y.astype(xc.dtype), h
 
 
-def _causal_conv(p, x, d_conv):
+def _causal_conv(p, x, d_conv, ctx=None):
     """Depthwise causal conv over time. x: (B, S, di)."""
     pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
-    out = sum(pad[:, i:i + x.shape[1], :] * p["conv_w"][i]
+    conv_w = _leaf(p, "conv_w", ctx)
+    out = sum(pad[:, i:i + x.shape[1], :] * conv_w[i]
               for i in range(d_conv))
-    return out + p["conv_b"]
+    return out + _leaf(p, "conv_b", ctx)
 
 
-def mamba_apply(cfg, p, x, d_model=None):
+def mamba_apply(cfg, p, x, d_model=None, ctx=None):
     """Full-sequence forward. x: (B, S, D) -> (B, S, D)."""
-    xz = L.dense(p["in_proj"], x)
+    xz = L.dense(p["in_proj"], x, _sub(ctx, "in_proj"))
     xi, z = jnp.split(xz, 2, axis=-1)
-    xc = jax.nn.silu(_causal_conv(p, xi, cfg.mamba_d_conv))
-    dt, bmat, cmat = _ssm_inputs(cfg, p, xc, d_model)
-    y, _ = _scan_ssm(p, xc, dt, bmat, cmat)
-    return L.dense(p["out_proj"], y * jax.nn.silu(z))
+    xc = jax.nn.silu(_causal_conv(p, xi, cfg.mamba_d_conv, ctx))
+    dt, bmat, cmat = _ssm_inputs(cfg, p, xc, d_model, ctx)
+    y, _ = _scan_ssm(p, xc, dt, bmat, cmat, ctx=ctx)
+    return L.dense(p["out_proj"], y * jax.nn.silu(z), _sub(ctx, "out_proj"))
 
 
 def mamba_init_state(cfg, bsz, d_model, dtype):

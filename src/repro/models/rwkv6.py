@@ -16,8 +16,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.perturb_ctx import sub as _sub
 from repro.models import layers as L
 from repro.models.sharding import maybe_shard
+
+
+def _leaf(p, name, ctx):
+    """p[name] + coeff*z under a PerturbCtx; the bare leaf without one.
+    Threading the ctx through every weight use is what gives rwkv6 the
+    fused ZO loss (no transient parameter copy)."""
+    return p[name] if ctx is None else ctx.perturb(name, p[name])
 
 
 def _heads(cfg):
@@ -55,19 +63,20 @@ def _shift(x, last=None):
     return jnp.concatenate([last, x[:, :-1]], axis=1)
 
 
-def _timemix_inputs(cfg, p, x, x_prev):
+def _timemix_inputs(cfg, p, x, x_prev, ctx=None):
     xx = x_prev - x
-    mu = p["mu"].astype(x.dtype)
+    mu = _leaf(p, "mu", ctx).astype(x.dtype)
     xr, xk, xv, xw, xg = (x + xx * mu[i] for i in range(5))
     h, hd = _heads(cfg)
     b, s, d = x.shape
-    r = L.dense(p["wr"], xr).reshape(b, s, h, hd)
-    k = L.dense(p["wk"], xk).reshape(b, s, h, hd)
-    v = L.dense(p["wv"], xv).reshape(b, s, h, hd)
-    g = jax.nn.silu(L.dense(p["wg"], xg))
+    r = L.dense(p["wr"], xr, _sub(ctx, "wr")).reshape(b, s, h, hd)
+    k = L.dense(p["wk"], xk, _sub(ctx, "wk")).reshape(b, s, h, hd)
+    v = L.dense(p["wv"], xv, _sub(ctx, "wv")).reshape(b, s, h, hd)
+    g = jax.nn.silu(L.dense(p["wg"], xg, _sub(ctx, "wg")))
     # data-dependent per-channel decay in (0, 1)
-    wlog = (p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"])
-            @ p["w_lora_b"])
+    wlog = (_leaf(p, "w0", ctx)
+            + jnp.tanh(xw.astype(jnp.float32) @ _leaf(p, "w_lora_a", ctx))
+            @ _leaf(p, "w_lora_b", ctx))
     w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hd)
     return r, k, v, g, w
 
@@ -80,12 +89,12 @@ def _wkv_cell(state, r_t, k_t, v_t, w_t, bonus):
     return state, y
 
 
-def timemix_apply(cfg, p, x, state=None, x_prev=None):
+def timemix_apply(cfg, p, x, state=None, x_prev=None, ctx=None):
     """x: (B,S,D). state: (B,H,hd,hd) f32 or None. Returns y, (state, x_last)."""
     b, s, d = x.shape
     h, hd = _heads(cfg)
     xp = _shift(x, x_prev)
-    r, k, v, g, w = _timemix_inputs(cfg, p, x, xp)
+    r, k, v, g, w = _timemix_inputs(cfg, p, x, xp, ctx)
     if state is None:
         state = jnp.zeros((b, h, hd, hd), jnp.float32)
     # pin the scan state head-sharded over the model axis: without this
@@ -95,7 +104,7 @@ def timemix_apply(cfg, p, x, state=None, x_prev=None):
     # lets sharding propagate to r/k/v/w without forcing extra reshards
     # (constraining all five cost 2x collectives -- Sec Perf addendum).
     state = maybe_shard(state, None, "model", None, None)
-    bonus = p["bonus"][None]
+    bonus = _leaf(p, "bonus", ctx)[None]
 
     def step(st, inp):
         r_t, k_t, v_t, w_t = inp
@@ -107,8 +116,8 @@ def timemix_apply(cfg, p, x, state=None, x_prev=None):
     xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
     state, ys = jax.lax.scan(step, state, xs)
     y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
-    y = L.rmsnorm(y.astype(x.dtype), p["ln_x"]) * g
-    return L.dense(p["wo"], y), (state, x[:, -1:])
+    y = L.rmsnorm(y.astype(x.dtype), _leaf(p, "ln_x", ctx)) * g
+    return L.dense(p["wo"], y, _sub(ctx, "wo")), (state, x[:, -1:])
 
 
 def channelmix_init(cfg, key):
@@ -124,11 +133,11 @@ def channelmix_init(cfg, key):
     }
 
 
-def channelmix_apply(cfg, p, x, x_prev=None):
+def channelmix_apply(cfg, p, x, x_prev=None, ctx=None):
     xp = _shift(x, x_prev)
     xx = xp - x
-    mu = p["mu"].astype(x.dtype)
+    mu = _leaf(p, "mu", ctx).astype(x.dtype)
     xk, xr = x + xx * mu[0], x + xx * mu[1]
-    r = jax.nn.sigmoid(L.dense(p["wr"], xr))
-    k = jnp.square(jax.nn.relu(L.dense(p["wk"], xk)))
-    return r * L.dense(p["wv"], k), x[:, -1:]
+    r = jax.nn.sigmoid(L.dense(p["wr"], xr, _sub(ctx, "wr")))
+    k = jnp.square(jax.nn.relu(L.dense(p["wk"], xk, _sub(ctx, "wk"))))
+    return r * L.dense(p["wv"], k, _sub(ctx, "wv")), x[:, -1:]

@@ -244,14 +244,14 @@ def batch_spec(batch_like: PyTree, mesh, data_axes=("data",)) -> PyTree:
 # 16-way and the cache dominates decode memory; attention over the
 # sharded axis lowers to a partial-softmax combine).
 _CACHE_LAYOUTS = {
-    # name: (batch_dim, seq_dim, model_dim)
+    # name: (batch_dim, seq_dim, model_dim). Every unified StateCache
+    # leaf is (n_layers, B, ...) -- batch always dim 1 (models/runtime).
     "k": (1, 2, None), "v": (1, 2, None),
     "xk": (1, None, None), "xv": (1, None, None),
-    "conv": (2, None, None),          # (nb, n_mamba, B, w, di)
-    "ssm": (2, None, 3),              # (nb, n_mamba, B, di, n)
-    "tm_state": (1, 2, None),         # (L, B, H, hd, hd): H over model
-    "tm_x": (1, None, None),
-    "cm_x": (1, None, None),
+    "conv": (1, None, None),          # (nb, B, w, di)
+    "ssm": (1, None, 2),              # (nb, B, di, n): di over model
+    "state": (1, 2, None),            # (L, B, H, hd, hd): H over model
+    "x_prev": (1, None, None),        # rwkv token-shift buffers
 }
 
 

@@ -1,44 +1,59 @@
-"""Model assembly for every assigned architecture family.
+"""Family assembly over the block-registry runtime.
 
 ``build_model(cfg)`` returns a :class:`Model` bundle of pure functions:
 
   init(key)                          -> params
-  forward(params, batch)             -> logits          (train / prefill)
-  loss(params, batch)                -> scalar          (the ZO objective)
-  init_cache(bsz)                    -> decode cache pytree
+  forward(params, batch)             -> (logits, aux)   (train / prefill)
+  loss(params, batch, perturb=...)   -> scalar          (the ZO objective)
+  init_cache(bsz)                    -> StateCache pytree
   decode_step(params, cache, tok, pos) -> (logits, cache)
-  prefill(params, cache, prompt)     -> (logits, cache)  (fused, optional)
+  prefill(params, cache, prompt)     -> (logits, cache)  (fused)
+
+All five families share ONE implementation of forward / loss /
+init_cache / decode_step / prefill -- the generic backbone engine in
+:mod:`repro.models.runtime`, driven by a declarative :class:`ModelPlan`
+assembled here from ``ModelConfig``. A family is just
+
+  * a plan: which (norm, mixer) sublayers each layer holds, resolved
+    against the block registry (``repro.models.blocks``), and
+  * an init: how RNG keys route into each block's ``init`` (kept
+    family-specific so parameter trees are bit-identical to the
+    pre-registry layout -- existing checkpoints, replay logs, and leaf
+    salts are untouched).
+
+Because the engine threads ``PerturbCtx`` through every block uniformly,
+the fused ZO perturbed forward works for every family -- no family
+materializes a transient perturbed parameter copy in its loss path.
 
 ``prefill`` runs a whole (B, P) prompt in ONE call, writing cache
 positions [0, P) and returning the next-token logits (B, 1, V) -- the
 serving engine's replacement for P per-token ``decode_step`` dispatches.
-Families without a wired prefill leave it ``None`` (the engine falls
-back to the per-token loop). ``decode_step`` accepts ``pos`` as a scalar
-(whole batch at one position) or as a (B,) vector (continuous batching:
-every slot decodes at its own position).
-
-Layer stacks are ``lax.scan``-ed over stacked (L, ...) params so the HLO
-is O(1) in depth -- essential for compiling 61-layer 1T-param configs.
+``decode_step`` accepts ``pos`` as a scalar (whole batch at one
+position) or as a (B,) vector (continuous batching). Layer stacks are
+``lax.scan``-ed over stacked (L, ...) params so the HLO is O(1) in
+depth -- essential for compiling 61-layer 1T-param configs.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.perturb_ctx import sub as _sub
+from repro.models import blocks as B
 from repro.models import layers as L
-from repro.models import mamba as M
-from repro.models import moe as MoE
-from repro.models import rwkv6 as R
+from repro.models import runtime as RT
 from repro.models.config import ModelConfig
+from repro.models.runtime import (AUX_LOSS_WEIGHT, ModelPlan, StackPlan,
+                                  Sublayer, softmax_xent)
+
+__all__ = ["Model", "build_model", "build_plan", "softmax_xent",
+           "AUX_LOSS_WEIGHT"]
 
 PyTree = Any
-AUX_LOSS_WEIGHT = 0.01
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,40 +63,90 @@ class Model:
     forward: Callable
     loss: Callable
     init_cache: Callable
-    decode_step: Callable
+    decode_step: Optional[Callable] = None
     prefill: Optional[Callable] = None
+    plan: Optional[ModelPlan] = None
+
+
+def _no_decode(*_args, **_kwargs):
+    """Decode-path stub for encoder-only architectures."""
+    raise ValueError("encoder-only arch has no decode path")
 
 
 # ===========================================================================
-# decoder-only LM (dense / moe / vlm-backbone)
+# plans: which sublayers each family's layer holds
+
+
+def _lm_plan(cfg: ModelConfig) -> ModelPlan:
+    """Decoder-only LM (dense / moe / vlm-backbone) and the encoder-only
+    classifier: [attn, ffn] per layer."""
+    ffn = "moe" if cfg.n_experts else "mlp"
+    return ModelPlan(cfg, StackPlan("blocks", cfg.n_layers, (
+        Sublayer("ln_attn", "attn", "attention"),
+        Sublayer("ln_ffn", ffn, ffn))))
+
+
+def _hybrid_plan(cfg: ModelConfig) -> ModelPlan:
+    """Hybrid (jamba): super-blocks of ``block_len`` sublayers -- mamba
+    everywhere except ``attn_index``, an FFN (MoE on odd sublayers when
+    configured) after each mixer."""
+    subs = []
+    for i in range(cfg.block_len):
+        if i == cfg.attn_index:
+            subs.append(Sublayer(f"sub_{i}/ln", f"sub_{i}/attn", "attention"))
+        else:
+            subs.append(Sublayer(f"sub_{i}/ln", f"sub_{i}/mamba", "mamba"))
+        ffn = "moe" if cfg.n_experts and i % 2 == 1 else "mlp"
+        subs.append(Sublayer(f"sub_{i}/ln_ffn", f"sub_{i}/{ffn}", ffn))
+    return ModelPlan(cfg, StackPlan("blocks", cfg.n_layers // cfg.block_len,
+                                    tuple(subs)))
+
+
+def _rwkv_plan(cfg: ModelConfig) -> ModelPlan:
+    return ModelPlan(cfg, StackPlan("blocks", cfg.n_layers, (
+        Sublayer("ln1", "tm", "rwkv_timemix"),
+        Sublayer("ln2", "cm", "rwkv_channelmix"))))
+
+
+def _encdec_plan(cfg: ModelConfig) -> ModelPlan:
+    """Encoder-decoder (whisper): stub conv frontend -> enc_embeds in the
+    batch; decoder = [self-attn, cross-attn, mlp] per layer."""
+    enc = StackPlan("enc_blocks", cfg.enc_layers, (
+        Sublayer("ln_attn", "attn", "attention", (("causal", False),)),
+        Sublayer("ln_ffn", "mlp", "mlp")))
+    dec = StackPlan("dec_blocks", cfg.dec_layers, (
+        Sublayer("ln_self", "self", "attention", (("causal", True),)),
+        Sublayer("ln_cross", "cross", "cross_attention"),
+        Sublayer("ln_ffn", "mlp", "mlp")))
+    return ModelPlan(cfg, dec, encoder=enc)
+
+
+_PLANS = {"dense": _lm_plan, "moe": _lm_plan, "encoder": _lm_plan,
+          "hybrid": _hybrid_plan, "ssm": _rwkv_plan, "encdec": _encdec_plan}
+
+
+def build_plan(cfg: ModelConfig) -> ModelPlan:
+    if cfg.family not in _PLANS:
+        raise ValueError(f"unknown family {cfg.family}")
+    return _PLANS[cfg.family](cfg)
+
+
+# ===========================================================================
+# inits: family-specific RNG-key routing into block inits. The exact
+# split/fold sequences are load-bearing: they pin parameter trees
+# bit-identical across refactors (golden parity suite).
 
 
 def _lm_block_init(cfg, key):
     k1, k2, k3, k4 = jax.random.split(key, 4)
-    p = {"ln_attn": L.norm_init(cfg, k1), "attn": L.attn_init(cfg, k2),
+    p = {"ln_attn": L.norm_init(cfg, k1),
+         "attn": B.get_block("attention").init(cfg, k2),
          "ln_ffn": L.norm_init(cfg, k3)}
     if cfg.n_experts:
-        p["moe"] = MoE.moe_init(cfg, k4)
+        p["moe"] = B.get_block("moe").init(cfg, k4)
     else:
-        p["mlp"] = L.mlp_init(cfg, k4)
+        p["mlp"] = B.get_block("mlp").init(cfg, k4)
     return p
-
-
-def _lm_block_apply(cfg, p, x, *, positions, kv_mask=None, ctx=None):
-    x = x + L.attn_apply(cfg, p["attn"],
-                         L.norm_apply(cfg, p["ln_attn"], x,
-                                      _sub(ctx, "ln_attn")),
-                         positions=positions, kv_mask=kv_mask,
-                         ctx=_sub(ctx, "attn"))
-    h = L.norm_apply(cfg, p["ln_ffn"], x, _sub(ctx, "ln_ffn"))
-    if cfg.n_experts:
-        fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-        moe_p = p["moe"] if ctx is None else ctx.materialize(p["moe"], "moe")
-        y, aux = fn(cfg, moe_p, h)
-    else:
-        y, aux = L.mlp_apply(cfg, p["mlp"], h, _sub(ctx, "mlp")), \
-            jnp.float32(0.0)
-    return x + y, aux
 
 
 def _lm_init(cfg, key):
@@ -98,214 +163,6 @@ def _lm_init(cfg, key):
     return p
 
 
-def _lm_backbone(cfg, params, x, positions, kv_mask=None, ctx=None):
-    def body(carry, xs):
-        bp, li = xs
-        h, aux = carry
-        # block leaves are scan-stacked (L, ...): the perturb ctx binds the
-        # layer index so per-layer z slices match the stacked leaf's field
-        bctx = None if ctx is None else ctx.scope("blocks").at_layer(li)
-        h, a = _lm_block_apply(cfg, bp, h, positions=positions,
-                               kv_mask=kv_mask, ctx=bctx)
-        return (h, aux + a), None
-
-    n_layers = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
-    (x, aux), _ = jax.lax.scan(
-        body, (x, jnp.float32(0.0)),
-        (params["blocks"], jnp.arange(n_layers, dtype=jnp.uint32)))
-    return L.norm_apply(cfg, params["ln_f"], x, _sub(ctx, "ln_f")), aux
-
-
-def _lm_forward(cfg, params, batch, last_only=False, perturb=None):
-    tokens = batch["tokens"]
-    x = L.embed_apply(cfg, params["embed"], tokens,
-                      ctx=_sub(perturb, "embed"))
-    n_prefix = 0
-    if "patch_embeds" in batch:                    # vlm: prepend stub patches
-        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
-        n_prefix = batch["patch_embeds"].shape[1]
-    positions = jnp.arange(x.shape[1])[None]
-    kv_mask = batch.get("attn_mask")
-    x, aux = _lm_backbone(cfg, params, x, positions, kv_mask, ctx=perturb)
-    if n_prefix:
-        x = x[:, n_prefix:]
-    if last_only:          # prefill: only the next-token logits are needed
-        x = x[:, -1:]
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x,
-                       ctx=perturb)
-    return logits, aux
-
-
-def softmax_xent(logits, targets, mask=None):
-    """Cross entropy that never materializes an f32 copy of the logits.
-
-    Two measured pathologies avoided (EXPERIMENTS.md Sec Perf):
-      * ``take_along_axis`` on vocab-sharded logits all-gathers the full
-        logits across the model axis -- replaced by a one-hot masked sum
-        (local + tiny psum);
-      * upcasting logits to f32 with multiple consumers (lse AND gold)
-        writes a full f32 logits tensor to HBM (12.9 GB/chip/pass on
-        granite train_4k) -- instead, max/gold read the bf16 logits and
-        the f32 exp-sum is a single-consumer fusion into its reduce.
-    """
-    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
-    sumexp = jnp.sum(
-        jnp.exp((logits - m[..., None]).astype(jnp.float32)), axis=-1)
-    lse = m.astype(jnp.float32) + jnp.log(sumexp)
-    gold = jnp.sum(
-        jnp.where(jnp.arange(logits.shape[-1]) == targets[..., None],
-                  logits, jnp.zeros((), logits.dtype)),
-        axis=-1).astype(jnp.float32)
-    nll = lse - gold
-    if mask is not None:
-        return jnp.sum(nll * mask) / (jnp.sum(mask) + 1e-9)
-    return jnp.mean(nll)
-
-
-def _lm_loss(cfg, params, batch, perturb=None):
-    """The ZO objective. ``perturb`` (a PerturbCtx) switches on the fused
-    perturbed forward: params stay untouched, every weight use applies
-    coeff*z in place (see core/perturb_ctx.py)."""
-    if cfg.n_classes:                                 # roberta/SST-2 path
-        logits, aux = _cls_forward(cfg, params, batch, perturb=perturb)
-        return softmax_xent(logits, batch["label"])
-    logits, aux = _lm_forward(cfg, params, batch, perturb=perturb)
-    ce = softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
-    return ce + AUX_LOSS_WEIGHT * aux
-
-
-def _cls_forward(cfg, params, batch, last_only=False, perturb=None):
-    """Encoder classification (roberta): CLS pooling + head.
-
-    last_only is accepted for signature parity with the other family
-    forwards (launch/dryrun calls model.forward(..., last_only=True)
-    generically) and ignored: CLS logits have no sequence axis."""
-    tokens = batch["tokens"]
-    x = L.embed_apply(cfg, params["embed"], tokens,
-                      ctx=_sub(perturb, "embed"))
-    positions = jnp.arange(x.shape[1])[None]
-    x, _ = _lm_backbone(cfg, params, x, positions, batch.get("attn_mask"),
-                        ctx=perturb)
-    cls = x[:, 0].astype(jnp.float32)
-    return L.dense(params["cls_head"], jnp.tanh(cls),
-                   _sub(perturb, "cls_head")), jnp.float32(0.0)
-
-
-def _lm_init_cache(cfg, bsz, max_len, dtype):
-    hd = cfg.resolved_head_dim
-    shape = (cfg.n_layers, bsz, max_len, cfg.n_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-
-
-def _decode_attn(cfg, p, x, ck, cv, pos):
-    """One-token attention against a (B, S_max, KV, hd) cache layer.
-
-    ``pos`` is a scalar (the whole batch decodes at one position) or a
-    (B,) vector (continuous batching: each slot at its own position)."""
-    b = x.shape[0]
-    pos = jnp.asarray(pos)
-    q, k, v = L.attn_project_qkv(cfg, p, x)       # (B,1,H,hd),(B,1,KV,hd)
-    if cfg.pos == "rope":
-        pos_b = pos[:, None] if pos.ndim else jnp.full((b, 1), pos)
-        cs = L.rope_cos_sin(pos_b, cfg.resolved_head_dim,
-                            cfg.rope_pct, cfg.rope_theta)
-        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
-    if pos.ndim:
-        def upd(c, u, p_):
-            return jax.lax.dynamic_update_slice(c, u, (p_, 0, 0))
-        ck = jax.vmap(upd)(ck, k.astype(ck.dtype), pos)
-        cv = jax.vmap(upd)(cv, v.astype(cv.dtype), pos)
-        valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
-    else:
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, pos, 0, 0))
-        valid = (jnp.arange(ck.shape[1]) <= pos)[None, :]
-    out = L.attention(q, ck, cv, causal=False, kv_mask=valid, chunk=0)
-    return L.dense(p["wo"], out.reshape(b, 1, -1)), ck, cv
-
-
-def _decode_positions(pos):
-    """Learned-pos embedding indices for a scalar or per-slot pos."""
-    pos = jnp.asarray(pos)
-    return pos[:, None] if pos.ndim else jnp.full((1,), pos)
-
-
-def _lm_decode_step(cfg, params, cache, tokens, pos):
-    """tokens: (B, 1) -> logits (B, 1, V); cache updated at ``pos``."""
-    x = L.embed_apply(cfg, params["embed"], tokens,
-                      positions=_decode_positions(pos))
-
-    def body(h, xs):
-        bp, ck, cv = xs
-        a, ck, cv = _decode_attn(cfg, bp["attn"],
-                                 L.norm_apply(cfg, bp["ln_attn"], h), ck, cv,
-                                 pos)
-        h = h + a
-        f = L.norm_apply(cfg, bp["ln_ffn"], h)
-        if cfg.n_experts:
-            fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-            y, _ = fn(cfg, bp["moe"], f)
-        else:
-            y = L.mlp_apply(cfg, bp["mlp"], f)
-        return h + y, (ck, cv)
-
-    x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
-                                         cache["v"]))
-    x = L.norm_apply(cfg, params["ln_f"], x)
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
-    return logits, {"k": ck, "v": cv}
-
-
-def _prefill_attn(cfg, p, x, ck, cv, positions):
-    """Full-prompt attention that also writes positions [0, S) of a
-    (B, S_max, KV, hd) cache layer -- causal masking keeps every prompt
-    token's view identical to the per-token decode loop's."""
-    b, s, _ = x.shape
-    q, k, v = L.attn_project_qkv(cfg, p, x)
-    if cfg.pos == "rope":
-        cs = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_pct,
-                            cfg.rope_theta)
-        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
-    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
-    out = L.attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
-    return L.dense(p["wo"], out.reshape(b, s, -1)), ck, cv
-
-
-def _lm_prefill(cfg, params, cache, tokens):
-    """Fused prefill: one jitted call over the whole (B, P) prompt writes
-    cache positions [0, P) and returns next-token logits (B, 1, V) --
-    P decode_step dispatches collapsed into one layer-scan."""
-    x = L.embed_apply(cfg, params["embed"], tokens)
-    positions = jnp.arange(tokens.shape[1])[None]
-
-    def body(h, xs):
-        bp, ck, cv = xs
-        a, ck, cv = _prefill_attn(cfg, bp["attn"],
-                                  L.norm_apply(cfg, bp["ln_attn"], h),
-                                  ck, cv, positions)
-        h = h + a
-        f = L.norm_apply(cfg, bp["ln_ffn"], h)
-        if cfg.n_experts:
-            fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-            y, _ = fn(cfg, bp["moe"], f)
-        else:
-            y = L.mlp_apply(cfg, bp["mlp"], f)
-        return h + y, (ck, cv)
-
-    x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
-                                         cache["v"]))
-    x = L.norm_apply(cfg, params["ln_f"], x[:, -1:])
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
-    return logits, {"k": ck, "v": cv}
-
-
-# ===========================================================================
-# hybrid (jamba): super-blocks of [mamba x7 + attn], FFN after each sublayer
-
-
 def _hybrid_block_init(cfg, key):
     nb = cfg.block_len
     ks = jax.random.split(key, 2 * nb)
@@ -313,37 +170,17 @@ def _hybrid_block_init(cfg, key):
     for i in range(nb):
         sub = {"ln": L.norm_init(cfg, ks[2 * i])}
         if i == cfg.attn_index:
-            sub["attn"] = L.attn_init(cfg, ks[2 * i + 1])
+            sub["attn"] = B.get_block("attention").init(cfg, ks[2 * i + 1])
         else:
-            sub["mamba"] = M.mamba_init(cfg, ks[2 * i + 1])
+            sub["mamba"] = B.get_block("mamba").init(cfg, ks[2 * i + 1])
         kf = jax.random.fold_in(ks[2 * i + 1], 7)
         sub["ln_ffn"] = L.norm_init(cfg, jax.random.fold_in(kf, 1))
         if cfg.n_experts and i % 2 == 1:
-            sub["moe"] = MoE.moe_init(cfg, kf)
+            sub["moe"] = B.get_block("moe").init(cfg, kf)
         else:
-            sub["mlp"] = L.mlp_init(cfg, kf)
+            sub["mlp"] = B.get_block("mlp").init(cfg, kf)
         p[f"sub_{i}"] = sub
     return p
-
-
-def _hybrid_block_apply(cfg, p, x, positions):
-    aux = jnp.float32(0.0)
-    for i in range(cfg.block_len):
-        sub = p[f"sub_{i}"]
-        h = L.norm_apply(cfg, sub["ln"], x)
-        if i == cfg.attn_index:
-            x = x + L.attn_apply(cfg, sub["attn"], h, positions=positions)
-        else:
-            x = x + M.mamba_apply(cfg, sub["mamba"], h)
-        f = L.norm_apply(cfg, sub["ln_ffn"], x)
-        if "moe" in sub:
-            fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-            y, a = fn(cfg, sub["moe"], f)
-            aux = aux + a
-        else:
-            y = L.mlp_apply(cfg, sub["mlp"], f)
-        x = x + y
-    return x, aux
 
 
 def _hybrid_init(cfg, key):
@@ -356,136 +193,15 @@ def _hybrid_init(cfg, key):
             "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, L._dt(cfg))}
 
 
-def _hybrid_forward(cfg, params, batch, last_only=False):
-    tokens = batch["tokens"]
-    x = L.embed_apply(cfg, params["embed"], tokens)
-    positions = jnp.arange(x.shape[1])[None]
-
-    def body(carry, bp):
-        h, aux = carry
-        h, a = _hybrid_block_apply(cfg, bp, h, positions)
-        return (h, aux + a), None
-
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
-    x = L.norm_apply(cfg, params["ln_f"], x)
-    if last_only:
-        x = x[:, -1:]
-    return L.unembed(cfg, params["embed"], params.get("lm_head"), x), aux
-
-
-def _hybrid_loss(cfg, params, batch, perturb=None):
-    # no fused forward wired for mamba mixers yet: one transient perturbed
-    # copy (the vmapdir memory profile), still zero walk sweeps
-    if perturb is not None:
-        params = perturb.materialize(params)
-    logits, aux = _hybrid_forward(cfg, params, batch)
-    return softmax_xent(logits, batch["targets"], batch.get("loss_mask")) \
-        + AUX_LOSS_WEIGHT * aux
-
-
-def _hybrid_init_cache(cfg, bsz, max_len, dtype):
-    nb = cfg.n_layers // cfg.block_len
-    hd = cfg.resolved_head_dim
-    di = cfg.mamba_expand * cfg.d_model
-    n_mamba = cfg.block_len - 1
-    return {
-        "k": jnp.zeros((nb, bsz, max_len, cfg.n_kv_heads, hd), dtype),
-        "v": jnp.zeros((nb, bsz, max_len, cfg.n_kv_heads, hd), dtype),
-        "conv": jnp.zeros((nb, n_mamba, bsz, cfg.mamba_d_conv - 1, di), dtype),
-        "ssm": jnp.zeros((nb, n_mamba, bsz, di, cfg.mamba_d_state),
-                         jnp.float32),
-    }
-
-
-def _hybrid_decode_step(cfg, params, cache, tokens, pos):
-    x = L.embed_apply(cfg, params["embed"], tokens)
-
-    def body(h, xs):
-        bp, ck, cv, conv, ssm = xs
-        new_conv, new_ssm = [], []
-        mi = 0
-        for i in range(cfg.block_len):
-            sub = bp[f"sub_{i}"]
-            z = L.norm_apply(cfg, sub["ln"], h)
-            if i == cfg.attn_index:
-                a, ck, cv = _decode_attn(cfg, sub["attn"], z, ck, cv, pos)
-                h = h + a
-            else:
-                st = {"conv": conv[mi], "ssm": ssm[mi]}
-                y, st = M.mamba_step(cfg, sub["mamba"], st, z)
-                new_conv.append(st["conv"])
-                new_ssm.append(st["ssm"])
-                h = h + y
-                mi += 1
-            f = L.norm_apply(cfg, sub["ln_ffn"], h)
-            if "moe" in sub:
-                fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-                y, _ = fn(cfg, sub["moe"], f)
-            else:
-                y = L.mlp_apply(cfg, sub["mlp"], f)
-            h = h + y
-        return h, (ck, cv, jnp.stack(new_conv), jnp.stack(new_ssm))
-
-    x, (ck, cv, conv, ssm) = jax.lax.scan(
-        body, x, (params["blocks"], cache["k"], cache["v"], cache["conv"],
-                  cache["ssm"]))
-    x = L.norm_apply(cfg, params["ln_f"], x)
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
-    return logits, {"k": ck, "v": cv, "conv": conv, "ssm": ssm}
-
-
-def _hybrid_prefill(cfg, params, cache, tokens):
-    """Fused prefill for the hybrid family: attention sublayers write the
-    KV cache, mamba sublayers roll (conv, ssm) state to the last token."""
-    x = L.embed_apply(cfg, params["embed"], tokens)
-    positions = jnp.arange(tokens.shape[1])[None]
-
-    def body(h, xs):
-        bp, ck, cv, conv, ssm = xs
-        new_conv, new_ssm = [], []
-        mi = 0
-        for i in range(cfg.block_len):
-            sub = bp[f"sub_{i}"]
-            z = L.norm_apply(cfg, sub["ln"], h)
-            if i == cfg.attn_index:
-                a, ck, cv = _prefill_attn(cfg, sub["attn"], z, ck, cv,
-                                          positions)
-                h = h + a
-            else:
-                st = {"conv": conv[mi], "ssm": ssm[mi]}
-                y, st = M.mamba_prefill(cfg, sub["mamba"], st, z)
-                new_conv.append(st["conv"])
-                new_ssm.append(st["ssm"])
-                h = h + y
-                mi += 1
-            f = L.norm_apply(cfg, sub["ln_ffn"], h)
-            if "moe" in sub:
-                fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-                y, _ = fn(cfg, sub["moe"], f)
-            else:
-                y = L.mlp_apply(cfg, sub["mlp"], f)
-            h = h + y
-        return h, (ck, cv, jnp.stack(new_conv), jnp.stack(new_ssm))
-
-    x, (ck, cv, conv, ssm) = jax.lax.scan(
-        body, x, (params["blocks"], cache["k"], cache["v"], cache["conv"],
-                  cache["ssm"]))
-    x = L.norm_apply(cfg, params["ln_f"], x[:, -1:])
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
-    return logits, {"k": ck, "v": cv, "conv": conv, "ssm": ssm}
-
-
-# ===========================================================================
-# ssm (rwkv6)
-
-
 def _rwkv_init(cfg, key):
     ke, kb, kn, kh = jax.random.split(key, 4)
 
     def block(k):
         k1, k2, k3, k4 = jax.random.split(k, 4)
-        return {"ln1": L.norm_init(cfg, k1), "tm": R.timemix_init(cfg, k2),
-                "ln2": L.norm_init(cfg, k3), "cm": R.channelmix_init(cfg, k4)}
+        return {"ln1": L.norm_init(cfg, k1),
+                "tm": B.get_block("rwkv_timemix").init(cfg, k2),
+                "ln2": L.norm_init(cfg, k3),
+                "cm": B.get_block("rwkv_channelmix").init(cfg, k4)}
 
     blocks = jax.vmap(block)(jax.random.split(kb, cfg.n_layers))
     return {"embed": L.embed_init(cfg, ke), "blocks": blocks,
@@ -493,103 +209,21 @@ def _rwkv_init(cfg, key):
             "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, L._dt(cfg))}
 
 
-def _rwkv_forward(cfg, params, batch, last_only=False):
-    x = L.embed_apply(cfg, params["embed"], batch["tokens"])
-
-    def body(h, bp):
-        y, _ = R.timemix_apply(cfg, bp["tm"], L.norm_apply(cfg, bp["ln1"], h))
-        h = h + y
-        y, _ = R.channelmix_apply(cfg, bp["cm"],
-                                  L.norm_apply(cfg, bp["ln2"], h))
-        return h + y, None
-
-    x, _ = jax.lax.scan(body, x, params["blocks"])
-    x = L.norm_apply(cfg, params["ln_f"], x)
-    if last_only:
-        x = x[:, -1:]
-    return L.unembed(cfg, params["embed"], params.get("lm_head"), x), \
-        jnp.float32(0.0)
-
-
-def _rwkv_loss(cfg, params, batch, perturb=None):
-    if perturb is not None:           # transient copy; see _hybrid_loss
-        params = perturb.materialize(params)
-    logits, _ = _rwkv_forward(cfg, params, batch)
-    return softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
-
-
-def _rwkv_init_cache(cfg, bsz, max_len, dtype):
-    h, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
-    ll = cfg.n_layers
-    return {
-        "tm_state": jnp.zeros((ll, bsz, h, hd, hd), jnp.float32),
-        "tm_x": jnp.zeros((ll, bsz, 1, cfg.d_model), dtype),
-        "cm_x": jnp.zeros((ll, bsz, 1, cfg.d_model), dtype),
-    }
-
-
-def _rwkv_decode_step(cfg, params, cache, tokens, pos):
-    x = L.embed_apply(cfg, params["embed"], tokens)
-
-    def body(h, xs):
-        bp, st, tx, cx = xs
-        y, (st, tx) = R.timemix_apply(cfg, bp["tm"],
-                                      L.norm_apply(cfg, bp["ln1"], h),
-                                      state=st, x_prev=tx)
-        h = h + y
-        y, cx = R.channelmix_apply(cfg, bp["cm"],
-                                   L.norm_apply(cfg, bp["ln2"], h), x_prev=cx)
-        return h + y, (st, tx, cx)
-
-    x, (st, tx, cx) = jax.lax.scan(
-        body, x, (params["blocks"], cache["tm_state"], cache["tm_x"],
-                  cache["cm_x"]))
-    x = L.norm_apply(cfg, params["ln_f"], x)
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
-    return logits, {"tm_state": st, "tm_x": tx, "cm_x": cx}
-
-
-def _rwkv_prefill(cfg, params, cache, tokens):
-    """Fused prefill for rwkv6: the full-sequence WKV scan started from
-    the cache state -- arithmetic-identical to per-token decode (the
-    recurrence is the same cell either way)."""
-    x = L.embed_apply(cfg, params["embed"], tokens)
-
-    def body(h, xs):
-        bp, st, tx, cx = xs
-        y, (st, tx) = R.timemix_apply(cfg, bp["tm"],
-                                      L.norm_apply(cfg, bp["ln1"], h),
-                                      state=st, x_prev=tx)
-        h = h + y
-        y, cx = R.channelmix_apply(cfg, bp["cm"],
-                                   L.norm_apply(cfg, bp["ln2"], h), x_prev=cx)
-        return h + y, (st, tx, cx)
-
-    x, (st, tx, cx) = jax.lax.scan(
-        body, x, (params["blocks"], cache["tm_state"], cache["tm_x"],
-                  cache["cm_x"]))
-    x = L.norm_apply(cfg, params["ln_f"], x[:, -1:])
-    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
-    return logits, {"tm_state": st, "tm_x": tx, "cm_x": cx}
-
-
-# ===========================================================================
-# encoder-decoder (whisper): stub conv frontend -> enc_embeds in the batch
-
-
 def _encdec_init(cfg, key):
     ke, kenc, kdec, kn = jax.random.split(key, 4)
+    attn_init = B.get_block("attention").init
+    mlp_init = B.get_block("mlp").init
 
     def enc_block(k):
         k1, k2, k3, k4 = jax.random.split(k, 4)
-        return {"ln_attn": L.norm_init(cfg, k1), "attn": L.attn_init(cfg, k2),
-                "ln_ffn": L.norm_init(cfg, k3), "mlp": L.mlp_init(cfg, k4)}
+        return {"ln_attn": L.norm_init(cfg, k1), "attn": attn_init(cfg, k2),
+                "ln_ffn": L.norm_init(cfg, k3), "mlp": mlp_init(cfg, k4)}
 
     def dec_block(k):
         k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
-        return {"ln_self": L.norm_init(cfg, k1), "self": L.attn_init(cfg, k2),
-                "ln_cross": L.norm_init(cfg, k3), "cross": L.attn_init(cfg, k4),
-                "ln_ffn": L.norm_init(cfg, k5), "mlp": L.mlp_init(cfg, k6)}
+        return {"ln_self": L.norm_init(cfg, k1), "self": attn_init(cfg, k2),
+                "ln_cross": L.norm_init(cfg, k3), "cross": attn_init(cfg, k4),
+                "ln_ffn": L.norm_init(cfg, k5), "mlp": mlp_init(cfg, k6)}
 
     return {
         "embed": L.embed_init(cfg, ke),
@@ -600,148 +234,32 @@ def _encdec_init(cfg, key):
     }
 
 
-def _encode(cfg, params, enc_embeds):
-    x = enc_embeds.astype(L._dt(cfg))
-    positions = jnp.arange(x.shape[1])[None]
-
-    def body(h, bp):
-        h = h + L.attn_apply(cfg, bp["attn"],
-                             L.norm_apply(cfg, bp["ln_attn"], h),
-                             positions=positions, causal=False)
-        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln_ffn"], h))
-        return h, None
-
-    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
-    return L.norm_apply(cfg, params["ln_enc"], x)
-
-
-def _cross_kv(cfg, p, enc_out):
-    b, t, _ = enc_out.shape
-    hd = cfg.resolved_head_dim
-    k = L.dense(p["wk"], enc_out).reshape(b, t, cfg.n_kv_heads, hd)
-    v = L.dense(p["wv"], enc_out).reshape(b, t, cfg.n_kv_heads, hd)
-    return k, v
-
-
-def _encdec_forward(cfg, params, batch, last_only=False):
-    enc_out = _encode(cfg, params, batch["enc_embeds"])
-    x = L.embed_apply(cfg, params["embed"], batch["tokens"])
-    positions = jnp.arange(x.shape[1])[None]
-
-    def body(h, bp):
-        h = h + L.attn_apply(cfg, bp["self"],
-                             L.norm_apply(cfg, bp["ln_self"], h),
-                             positions=positions, causal=True)
-        kv = _cross_kv(cfg, bp["cross"], enc_out)
-        h = h + L.cross_attn_apply(cfg, bp["cross"],
-                                   L.norm_apply(cfg, bp["ln_cross"], h), kv)
-        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln_ffn"], h))
-        return h, None
-
-    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
-    x = L.norm_apply(cfg, params["ln_f"], x)
-    if last_only:
-        x = x[:, -1:]
-    return x @ params["embed"]["tok"].T, jnp.float32(0.0)   # whisper ties
-
-
-def _encdec_loss(cfg, params, batch, perturb=None):
-    if perturb is not None:           # transient copy; see _hybrid_loss
-        params = perturb.materialize(params)
-    logits, _ = _encdec_forward(cfg, params, batch)
-    return softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
-
-
-def _encdec_init_cache(cfg, bsz, max_len, dtype):
-    hd = cfg.resolved_head_dim
-    ll = cfg.dec_layers
-    return {
-        "k": jnp.zeros((ll, bsz, max_len, cfg.n_kv_heads, hd), dtype),
-        "v": jnp.zeros((ll, bsz, max_len, cfg.n_kv_heads, hd), dtype),
-        # cross-attention K/V precomputed from the encoder once per request
-        "xk": jnp.zeros((ll, bsz, cfg.enc_len, cfg.n_kv_heads, hd), dtype),
-        "xv": jnp.zeros((ll, bsz, cfg.enc_len, cfg.n_kv_heads, hd), dtype),
-    }
-
-
-def _encdec_decode_step(cfg, params, cache, tokens, pos):
-    x = L.embed_apply(cfg, params["embed"], tokens,
-                      positions=_decode_positions(pos))
-
-    def body(h, xs):
-        bp, ck, cv, xk, xv = xs
-        a, ck, cv = _decode_attn(cfg, bp["self"],
-                                 L.norm_apply(cfg, bp["ln_self"], h), ck, cv,
-                                 pos)
-        h = h + a
-        h = h + L.cross_attn_apply(cfg, bp["cross"],
-                                   L.norm_apply(cfg, bp["ln_cross"], h),
-                                   (xk, xv))
-        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln_ffn"], h))
-        return h, (ck, cv)
-
-    x, (ck, cv) = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"],
-                                         cache["v"], cache["xk"],
-                                         cache["xv"]))
-    x = L.norm_apply(cfg, params["ln_f"], x)
-    logits = x @ params["embed"]["tok"].T
-    return logits, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+_INITS = {"dense": _lm_init, "moe": _lm_init, "encoder": _lm_init,
+          "hybrid": _hybrid_init, "ssm": _rwkv_init, "encdec": _encdec_init}
 
 
 # ===========================================================================
-# registry
+# the facade
 
 
 def build_model(cfg: ModelConfig) -> Model:
+    plan = build_plan(cfg)
     dtype = L._dt(cfg)
-    if cfg.family in ("dense", "moe"):
-        fwd = _cls_forward if cfg.n_classes else _lm_forward
-        return Model(
-            cfg=cfg,
-            init=partial(_lm_init, cfg),
-            forward=partial(fwd, cfg),
-            loss=partial(_lm_loss, cfg),
-            init_cache=lambda bsz, max_len=None: _lm_init_cache(
-                cfg, bsz, max_len or cfg.max_seq, dtype),
-            decode_step=partial(_lm_decode_step, cfg),
-            prefill=None if cfg.n_classes else partial(_lm_prefill, cfg),
-        )
+    init = partial(_INITS[cfg.family], cfg)
     if cfg.family == "encoder":
         return Model(
-            cfg=cfg, init=partial(_lm_init, cfg),
-            forward=partial(_cls_forward, cfg),
-            loss=partial(_lm_loss, cfg),
-            init_cache=lambda *a, **k: (_ for _ in ()).throw(
-                ValueError("encoder-only arch has no decode step")),
+            cfg=cfg, plan=plan, init=init,
+            forward=partial(RT.forward, plan),
+            loss=partial(RT.loss, plan),
+            init_cache=_no_decode,
             decode_step=None,
         )
-    if cfg.family == "hybrid":
-        return Model(
-            cfg=cfg, init=partial(_hybrid_init, cfg),
-            forward=partial(_hybrid_forward, cfg),
-            loss=partial(_hybrid_loss, cfg),
-            init_cache=lambda bsz, max_len=None: _hybrid_init_cache(
-                cfg, bsz, max_len or cfg.max_seq, dtype),
-            decode_step=partial(_hybrid_decode_step, cfg),
-            prefill=partial(_hybrid_prefill, cfg),
-        )
-    if cfg.family == "ssm":
-        return Model(
-            cfg=cfg, init=partial(_rwkv_init, cfg),
-            forward=partial(_rwkv_forward, cfg),
-            loss=partial(_rwkv_loss, cfg),
-            init_cache=lambda bsz, max_len=None: _rwkv_init_cache(
-                cfg, bsz, max_len or cfg.max_seq, dtype),
-            decode_step=partial(_rwkv_decode_step, cfg),
-            prefill=partial(_rwkv_prefill, cfg),
-        )
-    if cfg.family == "encdec":
-        return Model(
-            cfg=cfg, init=partial(_encdec_init, cfg),
-            forward=partial(_encdec_forward, cfg),
-            loss=partial(_encdec_loss, cfg),
-            init_cache=lambda bsz, max_len=None: _encdec_init_cache(
-                cfg, bsz, max_len or cfg.max_seq, dtype),
-            decode_step=partial(_encdec_decode_step, cfg),
-        )
-    raise ValueError(f"unknown family {cfg.family}")
+    return Model(
+        cfg=cfg, plan=plan, init=init,
+        forward=partial(RT.forward, plan),
+        loss=partial(RT.loss, plan),
+        init_cache=lambda bsz, max_len=None: RT.init_cache(
+            plan, bsz, max_len or cfg.max_seq, dtype),
+        decode_step=partial(RT.decode_step, plan),
+        prefill=None if cfg.n_classes else partial(RT.prefill, plan),
+    )

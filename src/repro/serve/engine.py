@@ -4,8 +4,10 @@ A fixed table of ``n_slots`` sequence slots shares one batched decode
 cache. Requests queue up; whenever a slot is free the next request is
 admitted *mid-flight*: its adapter is materialized through the
 :class:`~repro.serve.adapters.AdapterStore`, its prompt is prefilled in
-one fused call (``model.prefill``; per-token fallback for families
-without one), and the resulting cache rows are scattered into the slot.
+one fused call (``model.prefill`` -- wired for every decode-capable
+family, enc-dec included; a per-token fallback remains as a safety net
+for models built without one), and the cache rows are scattered into
+the slot.
 Finished sequences free their slot on the spot -- the engine never
 drains the whole batch to admit new work.
 
@@ -18,6 +20,11 @@ classic multi-model batching tradeoff (cf. S-LoRA-style adapter
 batching), except here an "adapter" is a replayed scalar log, not extra
 weights in the batch.
 
+The engine is family-agnostic: the block-registry runtime's unified
+StateCache puts every leaf at (n_layers, B, ...) -- batch on axis 1 for
+every family -- so slot scatter/merge is one ``jax.tree.map``, with no
+per-family axis table.
+
 MoE caveat: expert capacity is contended across the whole slot batch, so
 a slot's logits can depend on what its neighbors decode -- inherent to
 capacity-bounded MoE serving, not to this engine.
@@ -29,7 +36,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,11 +47,6 @@ from repro.serve import sampling
 from repro.serve.adapters import AdapterStore
 
 PyTree = Any
-
-# batch axis of each cache leaf, by family ({} -> every leaf on axis 1)
-_CACHE_BATCH_AXES: Dict[str, Dict[str, int]] = {
-    "hybrid": {"conv": 2, "ssm": 2},
-}
 
 
 @dataclasses.dataclass
@@ -110,8 +112,6 @@ class ServeEngine:
         self._out: List[List[int]] = [[] for _ in range(n_slots)]
         self._finished: List[Completion] = []
 
-        axes = _CACHE_BATCH_AXES.get(cfg.family, {})
-        baxes = {k: axes.get(k, 1) for k in self.cache}
         decode_step = self.model.decode_step
 
         # the slot-table cache is donated on every hot-path call: decode
@@ -124,26 +124,22 @@ class ServeEngine:
         @partial(jax.jit, donate_argnums=(1,))
         def decode_masked(params, cache, toks, pos, mask):
             logits, new = decode_step(params, cache, toks, pos)
-            out = {}
-            for k in cache:
-                ax = baxes[k]
-                m = jnp.reshape(mask,
-                                (1,) * ax + (-1,) + (1,) * (cache[k].ndim
-                                                            - ax - 1))
-                out[k] = jnp.where(m, new[k], cache[k])
-            return logits, out
+
+            def merge(c, n):       # every StateCache leaf: batch on axis 1
+                m = jnp.reshape(mask, (1, -1) + (1,) * (c.ndim - 2))
+                return jnp.where(m, n, c)
+
+            return logits, jax.tree.map(merge, cache, new)
 
         @partial(jax.jit, donate_argnums=(0,))
         def install(cache, prefill_cache, slot):
             """Scatter a B=1 prefilled cache into slot row ``slot``."""
-            out = {}
-            for k in cache:
-                ax = baxes[k]
-                row = jnp.take(prefill_cache[k], 0, axis=ax)
-                c = jnp.moveaxis(cache[k], ax, 0)
-                out[k] = jnp.moveaxis(c.at[slot].set(row.astype(c.dtype)),
-                                      0, ax)
-            return out
+
+            def put(c, row):
+                return c.at[:, slot].set(
+                    jnp.take(row, 0, axis=1).astype(c.dtype))
+
+            return jax.tree.map(put, cache, prefill_cache)
 
         self._decode_all = decode_all
         self._decode_masked = decode_masked

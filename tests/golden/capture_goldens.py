@@ -1,0 +1,104 @@
+"""Capture golden parity values for the block-registry runtime refactor.
+
+Run ONCE at the pre-refactor seed (PR 3 tree) to pin forward logits, loss
+scalars, and greedy decode tokens of every family; the parity suite
+(tests/test_runtime_parity.py) then holds the refactored runtime to these
+values. Re-running after the refactor must reproduce the same file --
+regenerate only if a deliberate numerical change lands, and say so in the
+commit that does.
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python tests/golden/capture_goldens.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import PerturbCtx
+from repro.models import build_model
+
+# one representative arch per family (reduced configs run f32 on CPU)
+FAMILY_ARCHS = {
+    "dense": "gemma-2b",
+    "moe": "granite-moe-1b-a400m",
+    "hybrid": "jamba-v0.1-52b",
+    "ssm": "rwkv6-7b",
+    "encdec": "whisper-base",
+}
+
+B, S, GEN = 2, 16, 8
+SEED, EPS = 9, 1e-3
+
+
+def make_batch(cfg, key):
+    kt, kg = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab),
+        "targets": jax.random.randint(kg, (B, S), 0, cfg.vocab),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 3), (B, cfg.enc_len, cfg.d_model))
+    return batch
+
+
+def capture(arch: str) -> dict:
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    rec = {"arch": arch, "family": cfg.family}
+    rec["param_l1"] = float(sum(
+        jnp.sum(jnp.abs(leaf.astype(jnp.float32)))
+        for leaf in jax.tree.leaves(params)))
+
+    logits, _ = model.forward(params, batch)
+    rec["logits_last"] = np.asarray(logits[:, -1, :], np.float32).tolist()
+    rec["logits_mean"] = float(jnp.mean(logits.astype(jnp.float32)))
+    rec["logits_absum"] = float(jnp.sum(jnp.abs(logits.astype(jnp.float32))))
+
+    rec["loss"] = float(model.loss(params, batch))
+    ctx = PerturbCtx(seed=jnp.uint32(SEED), coeff=jnp.float32(EPS))
+    rec["loss_perturbed"] = float(model.loss(params, batch, perturb=ctx))
+
+    # greedy decode through decode_step only (prompt fed token by token)
+    cache = model.init_cache(B, S + GEN)
+    toks = batch["tokens"]
+    out = []
+    last = None
+    for t in range(S + GEN - 1):
+        cur = toks[:, t:t + 1] if t < S else last
+        if t >= S:
+            out.append(np.asarray(cur))
+        lg, cache = model.decode_step(params, cache, cur, jnp.int32(t))
+        last = jnp.argmax(lg[:, -1:, :], axis=-1).astype(jnp.int32)
+    out.append(np.asarray(last))
+    rec["greedy_tokens"] = np.concatenate(
+        out, axis=1)[:, :GEN].astype(int).tolist()
+
+    if model.prefill is not None:
+        cache = model.init_cache(B, S + GEN)
+        plg, _ = model.prefill(params, cache, toks)
+        rec["prefill_logits_last"] = np.asarray(
+            plg[:, -1, :], np.float32).tolist()
+    return rec
+
+
+def main():
+    out = {arch: capture(arch) for arch in FAMILY_ARCHS.values()}
+    path = os.path.join(os.path.dirname(__file__), "runtime_parity.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

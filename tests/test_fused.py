@@ -191,14 +191,21 @@ def test_fused_step_descends():
     assert losses[-1] < losses[0]
 
 
-def test_fused_generic_fallback_ssm():
-    """Families without a wired fused forward (rwkv) take the transient
-    materialize fallback -- still equivalent to perturbing params."""
-    cfg = get_config("rwkv6-7b").reduced()
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "jamba-v0.1-52b",
+                                  "whisper-base"])
+def test_fused_step_matches_vmapdir_all_families(arch):
+    """The block-registry runtime threads PerturbCtx through every
+    family, so the fused estimator's projected gradients match vmapdir's
+    (which perturbs the whole tree) on hybrid / rwkv6 / encdec too --
+    the three families that used to take a transient materialize copy."""
+    cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = {k: jnp.asarray(v)
              for k, v in next(lm_batches(2, 16, cfg.vocab, seed=1)).items()}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (2, cfg.enc_len, cfg.d_model))
     mcfg = MezoConfig(eps=1e-3, lr=1e-2, n_directions=2)
     pf, auxf = mezo_step_fused(model.loss, jax.tree.map(jnp.copy, params),
                                batch, jnp.uint32(5), mcfg)

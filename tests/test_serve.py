@@ -27,10 +27,12 @@ def _synthetic_records(n, k=2, seed=0, lr=5e-2, eps=1e-2):
 # prefill / decode parity (satellite: transformer + one non-transformer)
 
 
-@pytest.mark.parametrize("arch", ["gemma-2b", "rwkv6-7b"])
+@pytest.mark.parametrize("arch", ["gemma-2b", "rwkv6-7b", "whisper-base"])
 def test_engine_matches_per_token_loop(arch):
     """Fused prefill + batched decode must emit the same greedy tokens as
-    the reference per-token loop (the old serve())."""
+    the reference per-token loop (the old serve()). whisper-base pins the
+    enc-dec prefill the runtime refactor added (cross K/V read from the
+    StateCache, zeros for token-only serving -- same as the loop)."""
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -93,10 +95,13 @@ def test_hybrid_prefill_matches_decode_loop():
     np.testing.assert_allclose(np.asarray(pf_lg, np.float32),
                                np.asarray(lg, np.float32),
                                rtol=2e-3, atol=2e-3)
-    for k in cache:
-        np.testing.assert_allclose(np.asarray(cache[k], np.float32),
-                                   np.asarray(pf_cache[k], np.float32),
-                                   rtol=2e-3, atol=2e-3, err_msg=k)
+    for (ka, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(cache),
+            jax.tree_util.tree_leaves_with_path(pf_cache)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=jax.tree_util.keystr(ka))
 
 
 def test_decode_step_vector_pos_matches_scalar():
@@ -113,10 +118,13 @@ def test_decode_step_vector_pos_matches_scalar():
     np.testing.assert_allclose(np.asarray(lg_s, np.float32),
                                np.asarray(lg_v, np.float32),
                                rtol=1e-5, atol=1e-6)
-    for k in cs:
-        np.testing.assert_allclose(np.asarray(cs[k], np.float32),
-                                   np.asarray(cv[k], np.float32),
-                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    for (ka, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(cs),
+            jax.tree_util.tree_leaves_with_path(cv)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=jax.tree_util.keystr(ka))
 
 
 # ---------------------------------------------------------------------------

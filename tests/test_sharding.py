@@ -59,20 +59,22 @@ def test_cache_spec_kv_and_state(mesh):
     cfg = get_config("jamba-v0.1-52b")
     model = build_model(cfg)
     cache = jax.eval_shape(lambda: model.init_cache(8, 64))
-    cs = shd.cache_spec(cache, mesh)
-    assert cs["k"][1] == "data"          # batch
-    assert cs["k"][2] == "model"         # sequence-parallel cache
-    assert cs["conv"][2] == "data"
-    assert cs["ssm"][3] == "model"       # d_inner
+    cs = shd.cache_spec(cache, mesh)["blocks"]
+    kv = cs[f"sub_{cfg.attn_index}"]["attn"]
+    assert kv["k"][1] == "data"          # batch
+    assert kv["k"][2] == "model"         # sequence-parallel cache
+    mam = cs["sub_0"]["mamba"]
+    assert mam["conv"][1] == "data"      # batch (unified axis 1)
+    assert mam["ssm"][2] == "model"      # d_inner
 
 
 def test_cache_spec_batch1_spills_seq_to_data(mesh):
     cfg = get_config("jamba-v0.1-52b")
     model = build_model(cfg)
     cache = jax.eval_shape(lambda: model.init_cache(1, 1024))
-    cs = shd.cache_spec(cache, mesh)
+    cs = shd.cache_spec(cache, mesh)["blocks"]
     # batch=1: seq axis takes both mesh axes
-    assert cs["k"][2] == ("model", "data")
+    assert cs[f"sub_{cfg.attn_index}"]["attn"]["k"][2] == ("model", "data")
 
 
 def test_maybe_shard_is_noop_without_mesh():
