@@ -11,7 +11,12 @@ container/TPU target:
   (d) the ``fused_families`` arm: compiled peak live-buffer bytes of the
       ZO loss for the families the block-registry runtime moved off the
       transient-materialize fallback (hybrid, rwkv6, encdec) -- fused
-      in-place perturbation vs. an explicit theta+eps*z copy.
+      in-place perturbation vs. an explicit theta+eps*z copy,
+  (e) the ``quant`` arm: resident weight bytes of the int8 quantized
+      base (per-channel scales included) vs the f32 fused baseline for
+      a dense and a non-dense family, plus the atol=0 check that the
+      quantized fused loss equals the materialized dequant(Wq)+eps*z
+      loss -- the acceptance numbers of the quantized-base runtime.
 """
 
 from __future__ import annotations
@@ -25,11 +30,14 @@ import time
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.configs import get_config
 from repro.core import MezoConfig, PerturbCtx, mezo_step
 from repro.data.synthetic import lm_batch_at, synthetic_lm_corpus
 from repro.models import build_model
 from repro.optim.adam import AdamConfig, adam_init, grad_train_step
+from repro.optim.quant import quantize_tree, quantized_bytes
 from repro.roofline.analysis import total_params
 
 
@@ -144,6 +152,66 @@ def fused_families(rows, table):
                      f"live_ratio={ratio:.2f};weight_ratio={wratio:.2f}"))
 
 
+# dense + non-dense coverage for the quantized-base acceptance numbers;
+# the other three families are held to the same parity in
+# tests/test_runtime_parity.py's quantized arm
+QUANT_ARCHS = ("gemma-2b", "rwkv6-7b")
+
+
+def quant_arm(rows, table):
+    """Resident weight bytes: int8 base (+ per-channel f32 scales) vs
+    the f32 fused baseline, plus the fused-vs-materialized atol=0 check.
+
+    The fused ZO path already fine-tunes at inference weight memory
+    (arm d); this arm shows that memory itself dropping ~4x when the
+    base is int8 -- the dequant rides inside the same perturbed-forward
+    kernels, so no arm of the step ever holds an f32 weight copy.
+
+    Scope (recorded as ``weight_bytes_int8_training``): the ~4x number
+    is the FROZEN base -- serving, eval, and the shared-across-users
+    tree. Training with ``--quant int8`` additionally attaches a
+    full-shape f32 delta per quantized leaf (the additive side that
+    receives the update stream), so the training-time resident weight
+    bytes are base + delta (~1.26x of plain f32 training); the win
+    during training is that ONE frozen int8 base serves any number of
+    concurrent per-user fine-tunes whose marginal state is the delta
+    (or, compacted, the few-KB replay log).
+    """
+    for arch in QUANT_ARCHS:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        qparams = quantize_tree(params)
+        resident, f32_eq = quantized_bytes(qparams)
+        train_resident, _ = quantized_bytes(
+            quantize_tree(params, with_delta=True))
+        ratio = f32_eq / max(resident, 1)
+
+        batch = {k: jnp.asarray(v) for k, v in
+                 lm_batch_at(0, 2, 32, cfg.vocab,
+                             synthetic_lm_corpus(2 * 40 * 33, cfg.vocab,
+                                                 0)).items()}
+        ctx = PerturbCtx(seed=jnp.uint32(7), coeff=jnp.float32(1e-3))
+        fused = np.asarray(model.loss(qparams, batch, perturb=ctx),
+                           np.float32)
+        mat = np.asarray(model.loss(ctx.materialize(qparams), batch),
+                         np.float32)
+        parity_atol0 = bool(fused == mat)
+
+        table[f"quant/{arch}"] = {
+            "weight_bytes_f32": int(f32_eq),
+            "weight_bytes_int8": int(resident),
+            "weight_bytes_int8_training": int(train_resident),
+            "f32_over_int8": ratio,
+            "fused_loss": float(fused),
+            "materialized_loss": float(mat),
+            "fused_equals_materialized_atol0": parity_atol0,
+        }
+        rows.append((f"table1/quant/{arch}", 0.0,
+                     f"f32_bytes={f32_eq};int8_bytes={resident};"
+                     f"ratio={ratio:.2f};parity_atol0={parity_atol0}"))
+
+
 def run(out_dir="experiments/bench"):
     os.makedirs(out_dir, exist_ok=True)
     rows = []
@@ -192,6 +260,9 @@ def run(out_dir="experiments/bench"):
     # (AFTER the RSS arm: compiling six loss programs here first would
     # raise the process ru_maxrss floor that arm (a) reads)
     fused_families(rows, table)
+
+    # (e) int8 quantized base vs f32 fused: resident weight bytes + parity
+    quant_arm(rows, table)
 
     with open(os.path.join(out_dir, "table1_memory.json"), "w") as f:
         json.dump(table, f, indent=1)

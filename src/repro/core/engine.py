@@ -106,6 +106,13 @@ class TrainState:
     seed-replay window for momentum, or an ``optim.adam.AdamState`` for
     the gradient baseline. Snapshotting this pytree whole (instead of bare
     params) is what makes momentum history / Adam moments survive resume.
+
+    ``params`` may be a quantized base (``optim.quant.quantize_tree``
+    with deltas attached): the int8 values + scales stay frozen, every
+    update rule writes the f32 ``delta`` of each quantized leaf through
+    the same ``add_scaled_z`` replay arithmetic, and the replay log is
+    byte-identical to an f32 run's -- checkpoints and adapters need no
+    format change.
     """
     params: PyTree
     step: jnp.ndarray              # uint32 scalar: completed-step count
@@ -152,9 +159,26 @@ def _apply_direction_updates(params, seed, gs, coeffs, cfg: MezoConfig):
 def _decay(params, wd_coeff):
     if wd_coeff is None:
         return params
-    return jax.tree.map(
-        lambda p: (p * (1.0 - wd_coeff)).astype(p.dtype)
-        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+    from repro.optim.quant import is_quantized
+
+    def leaf(p):
+        if is_quantized(p):
+            # decay the effective weight (q*scale + delta) by folding it
+            # entirely into the f32 delta: (q*s + d)(1-c) = q*s +
+            # (d*(1-c) - c*q*s). The int8 values AND the power-of-two
+            # scales stay frozen -- mutating the scale would break the
+            # exact-product property the atol=0 fused-vs-materialized
+            # parity rests on. Delta-less leaves are frozen (same
+            # semantics as add_scaled_z) and pass through.
+            if p.delta is None:
+                return p
+            wd = jnp.float32(wd_coeff)
+            return dataclasses.replace(
+                p, delta=p.delta * (1.0 - wd) - wd * p.base_f32())
+        return ((p * (1.0 - wd_coeff)).astype(p.dtype)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p)
+
+    return jax.tree.map(leaf, params, is_leaf=is_quantized)
 
 
 # ---------------------------------------------------------------------------

@@ -9,12 +9,14 @@ functional-JAX rendering of MeZO's in-place ``torch.normal_``-replay trick
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import rng as zrng
+from repro.optim.quant import is_quantized
 
 PyTree = Any
 
@@ -32,8 +34,14 @@ def _path_str(path) -> str:
 
 
 def leaf_salts(params: PyTree) -> PyTree:
-    """Static per-leaf salts (python ints), same structure as params."""
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    """Static per-leaf salts (python ints), same structure as params.
+
+    Quantized leaves are atomic here (the salt binds to the *leaf's*
+    path, never ``.../q``), so a quantized base shares every salt with
+    its f32 counterpart -- replay logs move freely between the two.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_quantized)
     salts = [zrng.leaf_salt(_path_str(path)) for path, _ in leaves]
     return jax.tree_util.tree_unflatten(treedef, salts)
 
@@ -60,9 +68,16 @@ def add_scaled_z(params: PyTree, seed, coeff, dist: str = "rademacher",
     use_kernel: route large 2-D leaves through the Pallas fused kernel
     (repro.kernels.ops.zo_add) instead of jnp; identical values by
     construction of the hash RNG.
+
+    Quantized leaves (optim/quant.py): the int8 base is frozen, so the
+    scaled z lands in the f32 ``delta`` (same z-field as the f32
+    counterpart -- the salt binds to the leaf's path, not ``.../q``). A
+    delta-less quantized leaf is a *frozen* base and passes through
+    untouched; attach deltas with ``quant.with_delta`` before training.
     """
     coeff = jnp.asarray(coeff, jnp.float32)
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_quantized)
     out = []
     for path, leaf in leaves:
         ps = _path_str(path)
@@ -70,6 +85,18 @@ def add_scaled_z(params: PyTree, seed, coeff, dist: str = "rademacher",
             out.append(leaf)
             continue
         salt = zrng.leaf_salt(ps)
+        if is_quantized(leaf):
+            if leaf.delta is None:
+                out.append(leaf)
+            elif use_kernel and kernel_aligned(leaf.shape):
+                from repro.kernels import ops as kops  # lazy: pallas import
+                out.append(dataclasses.replace(leaf, delta=kops.zo_add(
+                    leaf.delta, seed, salt, coeff, dist=dist)))
+            else:
+                z = zrng.z_field(seed, salt, leaf.shape, jnp.float32, dist)
+                out.append(dataclasses.replace(leaf,
+                                               delta=leaf.delta + coeff * z))
+            continue
         if use_kernel and kernel_aligned(leaf.shape):
             from repro.kernels import ops as kops  # lazy: pallas import
             out.append(kops.zo_add(leaf, seed, salt, coeff, dist=dist))
@@ -82,10 +109,13 @@ def add_scaled_z(params: PyTree, seed, coeff, dist: str = "rademacher",
 def dot_with_z(params_like: PyTree, seed, tangent: PyTree,
                dist: str = "rademacher"):
     """<tangent, z(seed)> -- used by tests to cross-check the estimator."""
-    leaves, _ = jax.tree_util.tree_flatten_with_path(params_like)
-    tleaves = jax.tree_util.tree_leaves(tangent)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(
+        params_like, is_leaf=is_quantized)
+    tleaves = jax.tree_util.tree_leaves(tangent, is_leaf=is_quantized)
     acc = jnp.float32(0.0)
     for (path, leaf), t in zip(leaves, tleaves):
+        if is_quantized(t):
+            t = t.dequantize_f32()
         ps = _path_str(path)
         if not is_perturbable(ps) or not jnp.issubdtype(leaf.dtype, jnp.floating):
             continue

@@ -16,6 +16,15 @@ applies its leaf's perturbation at the point of use --
     (``rng.z_rows``: O(tokens*d), never O(vocab*d));
   * small leaves (norm scales, biases) add a transient ``coeff*z``.
 
+Quantized bases (optim/quant.py): every primitive accepts a
+``QuantizedLeaf`` in place of an array -- dense projections fuse the
+int8 dequant into the same ``zo_matmul`` kernel pass
+(``X @ (q*scale + coeff*z)``), embedding gathers dequantize only the
+gathered rows, and the jnp fallback computes
+``q*scale (+ delta) + coeff*z`` in one transient f32 expression. The
+salt is the *leaf's* path (never ``.../q``), so the z-fields match the
+f32 base's bit-for-bit.
+
 Bit-compatibility contract: salts are derived from the same pytree path
 strings as ``core.perturb._path_str``, and scan-stacked ``(L, ...)``
 block leaves are handled by folding the layer index into a pre-hashed
@@ -35,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import rng as zrng
 from repro.core.perturb import _path_str, is_perturbable, kernel_aligned
+from repro.optim.quant import is_quantized, take_rows, take_rows_f32
 
 PyTree = Any
 
@@ -80,14 +90,20 @@ class PerturbCtx:
     # -- perturbation primitives ------------------------------------------
 
     def perturb(self, name: str, leaf):
-        """leaf + coeff*z, transient (the jnp fallback for any leaf)."""
+        """leaf + coeff*z, transient (the jnp fallback for any leaf).
+
+        Quantized leaves dequantize into the same transient:
+        ``q*scale (+ delta) + coeff*z`` in one f32 expression, with the
+        z-field of the *leaf's* path (identical to the f32 base's)."""
         path, base, off = self._leaf(name)
         if not is_perturbable(path) or \
                 not jnp.issubdtype(leaf.dtype, jnp.floating):
-            return leaf
+            return leaf.dequantize() if is_quantized(leaf) else leaf
         z = zrng.z_field(None, 0, leaf.shape, jnp.float32, self.dist,
                          prime_offset=off, base=base)
-        return (leaf.astype(jnp.float32) + self._coeff() * z).astype(leaf.dtype)
+        lf = leaf.dequantize_f32() if is_quantized(leaf) \
+            else leaf.astype(jnp.float32)
+        return (lf + self._coeff() * z).astype(leaf.dtype)
 
     def matmul(self, x, w, name: str = "w"):
         """x @ (w + coeff*z) for x (..., K), w (K, N).
@@ -101,27 +117,38 @@ class PerturbCtx:
         path, base, off = self._leaf(name)
         if not is_perturbable(path) or \
                 not jnp.issubdtype(w.dtype, jnp.floating):
-            return x @ w
+            return x @ (w.dequantize() if is_quantized(w) else w)
         k, n = w.shape
-        if self.use_kernel and kernel_aligned(w.shape):
+        if self.use_kernel and kernel_aligned(w.shape) and \
+                not (is_quantized(w) and w.delta is not None):
             from repro.kernels import ops as kops  # lazy: pallas import
             lead = x.shape[:-1]
-            y = kops.zo_matmul(x.reshape(-1, k), w, base, 0, self._coeff(),
-                               dist=self.dist, prime_offset=off,
-                               prehashed=True)
+            if is_quantized(w):
+                # dequant fused into the same kernel tile pass:
+                # X @ (q*scale + coeff*z), base resident as int8
+                y = kops.zo_matmul(x.reshape(-1, k), w.q, base, 0,
+                                   self._coeff(), dist=self.dist,
+                                   prime_offset=off, prehashed=True,
+                                   scale=w.scale)
+            else:
+                y = kops.zo_matmul(x.reshape(-1, k), w, base, 0,
+                                   self._coeff(), dist=self.dist,
+                                   prime_offset=off, prehashed=True)
             return y.reshape(*lead, n)
         return x @ self.perturb(name, w)
 
     def take(self, name: str, table, ids):
-        """take(table + coeff*z, ids, axis=0), perturbing only gathered rows."""
+        """take(table + coeff*z, ids, axis=0), perturbing only gathered
+        rows. A quantized table dequantizes only the gathered rows too
+        (quant.take_rows): still O(tokens*d), never O(vocab*d)."""
         path, base, off = self._leaf(name)
-        rows = jnp.take(table, ids, axis=0)
         if not is_perturbable(path) or \
                 not jnp.issubdtype(table.dtype, jnp.floating):
-            return rows
+            return take_rows(table, ids)
+        rows = take_rows_f32(table, ids)
         z = zrng.z_rows(base, ids, table.shape[1], jnp.float32, self.dist,
                         prime_offset=off)
-        return (rows.astype(jnp.float32) + self._coeff() * z).astype(table.dtype)
+        return (rows + self._coeff() * z).astype(table.dtype)
 
     def materialize(self, subtree: PyTree, name: str = "") -> PyTree:
         """Perturb every leaf of a param subtree transiently.
@@ -134,7 +161,8 @@ class PerturbCtx:
         transient copy of the subtree, no walk sweeps.
         """
         ctx = self.scope(name) if name else self
-        leaves, treedef = jax.tree_util.tree_flatten_with_path(subtree)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(
+            subtree, is_leaf=is_quantized)
         out = [ctx.perturb(_path_str(p), leaf) for p, leaf in leaves]
         return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -3,6 +3,10 @@
 On non-TPU backends (this container) the kernels run in interpret mode,
 which executes the kernel body in Python for correctness validation; on
 TPU they compile to Mosaic.
+
+Both wrappers accept ``scale=`` (per-output-channel f32 vector) to mark
+``w`` as an int8 quantized base: dequantization then fuses into the same
+kernel tile pass (see kernels/zo_perturb.py).
 """
 
 from __future__ import annotations
@@ -15,15 +19,16 @@ _INTERPRET = jax.default_backend() != "tpu"
 
 
 def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
-           block=(256, 256), prime_offset: int = 0, prehashed: bool = False):
+           block=(256, 256), prime_offset: int = 0, prehashed: bool = False,
+           scale=None):
     return _k.zo_add(w, seed, salt, coeff, dist=dist, block=block,
                      interpret=_INTERPRET, prime_offset=prime_offset,
-                     prehashed=prehashed)
+                     prehashed=prehashed, scale=scale)
 
 
 def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
               blocks=(128, 128, 128), prime_offset: int = 0,
-              prehashed: bool = False):
+              prehashed: bool = False, scale=None):
     return _k.zo_matmul(x, w, seed, salt, coeff, dist=dist, blocks=blocks,
                         interpret=_INTERPRET, prime_offset=prime_offset,
-                        prehashed=prehashed)
+                        prehashed=prehashed, scale=scale)

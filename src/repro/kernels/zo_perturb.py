@@ -12,6 +12,12 @@ kernel so z never exists in HBM at all:
                              into the MXU pipeline; W is read once and z
                              costs zero HBM bytes)
 
+Both kernels also take an optional per-output-channel ``scale`` vector
+marking W as an *int8 quantized base* (optim/quant.py): the tile is then
+dequantized in VMEM (``w*scale``) before the perturbation/dot, so the
+resident base stays ~1 byte/param in HBM and the dequant costs zero extra
+memory traffic.
+
 The RNG is the same counter-based avalanche hash as repro.core.rng, keyed
 by absolute (row, col) coordinates, so full-array references in ref.py
 reproduce kernel tiles bit-exactly for any BlockSpec tiling.
@@ -90,31 +96,66 @@ def _zo_add_kernel(seed_ref, coeff_ref, w_ref, o_ref, *, salt, bm, bn, dist,
     o_ref[...] = (w + coeff_ref[0] * z).astype(o_ref.dtype)
 
 
+def _zo_add_q_kernel(seed_ref, coeff_ref, w_ref, s_ref, o_ref, *, salt, bm,
+                     bn, dist, prime_offset, prehashed):
+    """Quantized-base variant: W is int8, s the (1, bn) per-channel scale
+    tile; dequant happens in VMEM, fused with the perturbation."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    z = _tile_z(seed_ref[0], salt, (bm, bn), i * bm, j * bn, dist,
+                prime_offset, prehashed)
+    w = w_ref[...].astype(jnp.float32) * s_ref[...]
+    o_ref[...] = (w + coeff_ref[0] * z).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("salt", "dist", "block", "interpret",
                                     "prime_offset", "prehashed"))
 def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
            block=(256, 256), interpret: bool = False,
-           prime_offset: int = 0, prehashed: bool = False):
-    """W + coeff*z for a 2-D leaf; z regenerated in VMEM, never in HBM."""
+           prime_offset: int = 0, prehashed: bool = False, scale=None):
+    """W + coeff*z for a 2-D leaf; z regenerated in VMEM, never in HBM.
+
+    scale: per-output-channel (N,) f32 scales marking ``w`` as an int8
+    quantized base -- the kernel then computes ``w*scale + coeff*z``
+    (dequant fused into the same tile pass; output f32). HBM reads drop
+    to ~1/4: the int8 values plus an (N,) scale vector.
+    """
     m, n = w.shape
     bm, bn = _pick(m, block[0]), _pick(n, block[1])
     grid = (m // bm, n // bn)
     seed = jnp.asarray(seed, _U32).reshape(1)
     coeff = jnp.asarray(coeff, jnp.float32).reshape(1)
+    if scale is None:
+        return pl.pallas_call(
+            functools.partial(_zo_add_kernel, salt=salt, bm=bm, bn=bn,
+                              dist=dist, prime_offset=prime_offset,
+                              prehashed=prehashed),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),  # seed
+                pl.BlockSpec(memory_space=pltpu.SMEM),  # coeff
+                pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+            interpret=interpret,
+        )(seed, coeff, w)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, n)
     return pl.pallas_call(
-        functools.partial(_zo_add_kernel, salt=salt, bm=bm, bn=bn, dist=dist,
-                          prime_offset=prime_offset, prehashed=prehashed),
+        functools.partial(_zo_add_q_kernel, salt=salt, bm=bm, bn=bn,
+                          dist=dist, prime_offset=prime_offset,
+                          prehashed=prehashed),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # seed
             pl.BlockSpec(memory_space=pltpu.SMEM),  # coeff
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(seed, coeff, w)
+    )(seed, coeff, w, scale)
 
 
 # ---------------------------------------------------------------------------
@@ -141,16 +182,47 @@ def _zo_matmul_kernel(seed_ref, coeff_ref, x_ref, w_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _zo_matmul_q_kernel(seed_ref, coeff_ref, x_ref, w_ref, s_ref, o_ref,
+                        acc_ref, *, salt, bk, bn, n_k, dist, prime_offset,
+                        prehashed):
+    """Quantized-base variant of :func:`_zo_matmul_kernel`: the W tile
+    arrives int8, the (1, bn) per-channel scale tile rides along, and
+    ``dequant + coeff*z`` happens in VMEM before the MXU dot -- the base
+    never exists dequantized in HBM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = pl.program_id(1)
+    z = _tile_z(seed_ref[0], salt, (bk, bn), k * bk, j * bn, dist,
+                prime_offset, prehashed)
+    w = w_ref[...].astype(jnp.float32) * s_ref[...] + coeff_ref[0] * z
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("salt", "dist", "blocks", "interpret",
                                     "prime_offset", "prehashed"))
 def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
               blocks=(128, 128, 128), interpret: bool = False,
-              prime_offset: int = 0, prehashed: bool = False):
+              prime_offset: int = 0, prehashed: bool = False, scale=None):
     """Y = X @ (W + coeff * z(seed)). X: (M, K), W: (K, N).
 
     The perturbed weight tile lives only in VMEM: HBM traffic is exactly
     the unperturbed matmul's (X, W read once; Y written once).
+
+    scale: per-output-channel (N,) f32 scales marking ``w`` as an int8
+    quantized base -- the kernel then computes
+    ``X @ (w*scale + coeff*z)`` with dequantization fused into the same
+    VMEM tile pass (weight HBM reads ~1/4 of the f32 kernel's, z still
+    zero bytes; the prehashed-salt scheme is untouched).
 
     prehashed/prime_offset: see :func:`_tile_z` -- lets the kernel compute
     the perturbed forward for one layer-slice of a scan-stacked (L, K, N)
@@ -163,7 +235,27 @@ def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
     grid = (m // bm, n // bn, k // bk)
     seed = jnp.asarray(seed, _U32).reshape(1)
     coeff = jnp.asarray(coeff, jnp.float32).reshape(1)
-    kern = functools.partial(_zo_matmul_kernel, salt=salt, bk=bk, bn=bn,
+    if scale is None:
+        kern = functools.partial(_zo_matmul_kernel, salt=salt, bk=bk, bn=bn,
+                                 n_k=grid[2], dist=dist,
+                                 prime_offset=prime_offset,
+                                 prehashed=prehashed)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(seed, coeff, x, w)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, n)
+    kern = functools.partial(_zo_matmul_q_kernel, salt=salt, bk=bk, bn=bn,
                              n_k=grid[2], dist=dist,
                              prime_offset=prime_offset, prehashed=prehashed)
     return pl.pallas_call(
@@ -174,9 +266,10 @@ def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(seed, coeff, x, w)
+    )(seed, coeff, x, w, scale)

@@ -66,6 +66,7 @@ def make_trainer(args) -> Trainer:
     tcfg = TrainerConfig(
         optimizer=args.optimizer,
         estimator=args.estimator, update=args.update,
+        quant=args.quant,
         mezo=MezoConfig(eps=args.eps, lr=args.lr,
                         n_directions=args.directions, dist=args.zo_dist,
                         use_kernel=args.use_kernel,
@@ -109,6 +110,13 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--weight-decay", type=float, default=0.0)
     ap.add_argument("--zo-dist", default="rademacher",
                     choices=["rademacher", "gaussian"])
+    ap.add_argument("--quant", default="none",
+                    help="base-weight quantization mode (none | int8): "
+                         "int8 freezes the base as int8 + per-channel "
+                         "scales with dequant fused into the perturbed-"
+                         "forward kernels; the ZO update stream lands in "
+                         "per-leaf f32 deltas. Validated by the trainer "
+                         "(unknown modes raise with the supported list)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route MXU-aligned leaves/projections through the "
                          "Pallas ZO kernels (zo_add, and zo_matmul for "

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.models import layers as L
 from repro.models import moe as MoE
 from repro.models.blocks.base import BlockType, register_block
+from repro.optim.quant import dequantize_tree
 
 
 def _mlp_apply(cfg, p, x, rc, ctx=None):
@@ -21,8 +22,13 @@ def _mlp_apply(cfg, p, x, rc, ctx=None):
 
 
 def _moe_apply(cfg, p, x, rc, ctx=None):
+    """Expert weights are 3/4-D stacked leaves consumed inside
+    sort-based dispatch, so both the fused ZO path and the quantized
+    base take a scoped transient copy here: ``ctx.materialize``
+    (perturb + dequant) with a ctx, a plain dequant without one --
+    per-block, per-layer-slice, never the whole model."""
     fn = MoE.moe_apply_ep if cfg.moe_ep else MoE.moe_apply
-    moe_p = p if ctx is None else ctx.materialize(p)
+    moe_p = dequantize_tree(p) if ctx is None else ctx.materialize(p)
     return fn(cfg, moe_p, x)
 
 

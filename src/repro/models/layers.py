@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.perturb_ctx import sub as _sub
+from repro.optim.quant import deq as _deq
+from repro.optim.quant import take_rows as _take_rows
 
 # ---------------------------------------------------------------------------
 # norms
@@ -102,9 +104,12 @@ def dense_init(key, d_in, d_out, dtype, scale=0.02, bias=False):
 
 
 def dense(p, x, ctx=None):
-    y = x @ p["w"] if ctx is None else ctx.matmul(x, p["w"], "w")
+    """ctx=None is the plain forward (quantized weights dequantize
+    transiently at the use site); with a ctx the perturbation -- and for
+    a quantized base the dequant too -- fuses into the matmul."""
+    y = x @ _deq(p["w"]) if ctx is None else ctx.matmul(x, p["w"], "w")
     if "b" in p:
-        y = y + (p["b"] if ctx is None else ctx.perturb("b", p["b"]))
+        y = y + (_deq(p["b"]) if ctx is None else ctx.perturb("b", p["b"]))
     return y
 
 
@@ -266,7 +271,7 @@ def mlp_apply(cfg, p, x, ctx=None):
     if cfg.act in ("swiglu", "geglu"):
         # gated w_in is an interleaved (D, F, 2) leaf: its z-field spans 3
         # dims, so the 2-D fused kernel doesn't apply -- transient perturb
-        w_in = p["w_in"]["w"] if ctx is None else \
+        w_in = _deq(p["w_in"]["w"]) if ctx is None else \
             ctx.perturb("w_in/w", p["w_in"]["w"])
         h = jnp.einsum("...d,dfg->...fg", x, w_in)
         u, g = h[..., 0], h[..., 1]
@@ -296,13 +301,13 @@ def embed_apply(cfg, p, tokens, positions=None, ctx=None):
     """ctx (scoped to "embed") perturbs only the gathered rows: O(S*D)
     transient z, never the (V, D) table."""
     if ctx is None:
-        x = jnp.take(p["tok"], tokens, axis=0)
+        x = _take_rows(p["tok"], tokens)
     else:
         x = ctx.take("tok", p["tok"], tokens)
     if cfg.pos == "learned":
         pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
         if ctx is None:
-            x = x + jnp.take(p["pos"], pos, axis=0)
+            x = x + _take_rows(p["pos"], pos)
         else:
             x = x + ctx.take("pos", p["pos"], pos)
     return x
@@ -313,7 +318,7 @@ def unembed(cfg, embed_p, head_p, x, ctx=None):
     the param-tree ROOT here (the two branches touch different leaves)."""
     if cfg.tie_embeddings or head_p is None:
         if ctx is None:
-            return x @ embed_p["tok"].T
+            return x @ _deq(embed_p["tok"]).T
         # tied head reads the embedding transposed; the row-major z-field
         # doesn't transpose into kernel tiles, so perturb transiently
         return x @ ctx.scope("embed").perturb("tok", embed_p["tok"]).T

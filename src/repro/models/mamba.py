@@ -18,11 +18,13 @@ import jax.numpy as jnp
 
 from repro.core.perturb_ctx import sub as _sub
 from repro.models import layers as L
+from repro.optim.quant import deq as _deq
 
 
 def _leaf(p, name, ctx):
-    """p[name] + coeff*z under a ctx; the bare leaf without one."""
-    return p[name] if ctx is None else ctx.perturb(name, p[name])
+    """p[name] + coeff*z under a ctx; the bare (dequantized) leaf
+    without one."""
+    return _deq(p[name]) if ctx is None else ctx.perturb(name, p[name])
 
 
 def _dims(cfg, d_model=None):
@@ -126,8 +128,9 @@ def mamba_prefill(cfg, p, state, x, d_model=None):
     xz = L.dense(p["in_proj"], x)
     xi, z = jnp.split(xz, 2, axis=-1)                 # (B, S, di)
     window = jnp.concatenate([state["conv"], xi], axis=1)
-    xc = sum(window[:, i:i + s, :] * p["conv_w"][i]
-             for i in range(d_conv)) + p["conv_b"]
+    conv_w = _leaf(p, "conv_w", None)
+    xc = sum(window[:, i:i + s, :] * conv_w[i]
+             for i in range(d_conv)) + _leaf(p, "conv_b", None)
     xc = jax.nn.silu(xc)
     dt, bmat, cmat = _ssm_inputs(cfg, p, xc, d_model)
     y, h = _scan_ssm(p, xc, dt, bmat, cmat, h0=state["ssm"])
@@ -140,8 +143,9 @@ def mamba_step(cfg, p, state, x, d_model=None):
     xz = L.dense(p["in_proj"], x)
     xi, z = jnp.split(xz, 2, axis=-1)                 # (B, 1, di)
     window = jnp.concatenate([state["conv"], xi], axis=1)
-    xc = sum(window[:, i:i + 1, :] * p["conv_w"][i]
-             for i in range(cfg.mamba_d_conv)) + p["conv_b"]
+    conv_w = _leaf(p, "conv_w", None)
+    xc = sum(window[:, i:i + 1, :] * conv_w[i]
+             for i in range(cfg.mamba_d_conv)) + _leaf(p, "conv_b", None)
     xc = jax.nn.silu(xc)
     dt, bmat, cmat = _ssm_inputs(cfg, p, xc, d_model)
     y, h = _scan_ssm(p, xc, dt, bmat, cmat, h0=state["ssm"])

@@ -19,13 +19,14 @@ import jax.numpy as jnp
 from repro.core.perturb_ctx import sub as _sub
 from repro.models import layers as L
 from repro.models.sharding import maybe_shard
+from repro.optim.quant import deq as _deq
 
 
 def _leaf(p, name, ctx):
-    """p[name] + coeff*z under a PerturbCtx; the bare leaf without one.
-    Threading the ctx through every weight use is what gives rwkv6 the
-    fused ZO loss (no transient parameter copy)."""
-    return p[name] if ctx is None else ctx.perturb(name, p[name])
+    """p[name] + coeff*z under a PerturbCtx; the bare (dequantized) leaf
+    without one. Threading the ctx through every weight use is what
+    gives rwkv6 the fused ZO loss (no transient parameter copy)."""
+    return _deq(p[name]) if ctx is None else ctx.perturb(name, p[name])
 
 
 def _heads(cfg):

@@ -1,7 +1,14 @@
-"""Derivative-based baselines (the paper's comparison arm: Adam, SGD)."""
+"""Derivative-based baselines (Adam, SGD) + the int8 quantized-base
+runtime (``optim/quant.py``)."""
 
 from repro.optim.adam import (AdamConfig, AdamState, adam_init, adam_update,
                               grad_train_step, sgd_train_step)
+from repro.optim.quant import (QUANT_MODES, QuantizedLeaf, check_quant_mode,
+                               dequantize_tree, is_quantized, quantize_leaf,
+                               quantize_tree, tree_is_quantized, with_delta)
 
 __all__ = ["AdamConfig", "AdamState", "adam_init", "adam_update",
-           "grad_train_step", "sgd_train_step"]
+           "grad_train_step", "sgd_train_step", "QUANT_MODES",
+           "QuantizedLeaf", "check_quant_mode", "dequantize_tree",
+           "is_quantized", "quantize_leaf", "quantize_tree",
+           "tree_is_quantized", "with_delta"]

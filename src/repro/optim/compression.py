@@ -7,6 +7,11 @@ moot -- which is precisely the paper's systems advantage at scale.
 Per-leaf symmetric int8 quantization with an fp32 absmax scale. Under jit
 SPMD the subsequent psum runs over int32-accumulated values; stochastic
 rounding keeps the compressed estimator unbiased.
+
+The quantize/dequantize primitives live in :mod:`repro.optim.quant` (one
+copy shared with adapter delta compaction and the quantized-base
+runtime); this module keeps the gradient-tree roundtrip and re-exports
+the helpers for back-compat.
 """
 
 from __future__ import annotations
@@ -14,21 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng as zrng
-
-
-def int8_quantize(g: jnp.ndarray, seed=jnp.uint32(0x51CA)):
-    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0 + 1e-30
-    x = g.astype(jnp.float32) / scale
-    # stochastic rounding via the same hash field used for ZO noise
-    u = (zrng._coord_hash(seed, 0xC0DE, g.shape) >> 8).astype(jnp.float32) \
-        * (1.0 / 16777216.0)
-    q = jnp.clip(jnp.floor(x + u), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def int8_dequantize(q: jnp.ndarray, scale, dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+from repro.optim.quant import int8_dequantize, int8_quantize  # noqa: F401
 
 
 def int8_compress_tree(grads):

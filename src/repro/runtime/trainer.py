@@ -31,6 +31,8 @@ from repro.core.mezo import MezoConfig
 from repro.models import build_model
 from repro.models.config import ModelConfig
 from repro.optim.adam import AdamConfig, adam_init, grad_train_step
+from repro.optim.quant import (check_quant_mode, quantize_tree,
+                               tree_is_quantized)
 from repro.runtime.stragglers import StragglerPolicy
 
 PyTree = Any
@@ -43,6 +45,7 @@ class TrainerConfig:
     update: Optional[str] = None     # sgd | momentum        .. optimizer)
     mezo: MezoConfig = MezoConfig()
     adam: AdamConfig = AdamConfig()
+    quant: str = "none"              # base-weight quantization: none | int8
     n_steps: int = 100
     seed: int = 0
     ckpt_dir: Optional[str] = None
@@ -56,6 +59,13 @@ class Trainer:
                  batches: Iterator[Any], mesh=None,
                  log_fn: Callable[[str], None] = print):
         self.strategy = None
+        check_quant_mode(train_cfg.quant)
+        if train_cfg.quant != "none" and train_cfg.optimizer == "adam":
+            raise ValueError(
+                "quantized bases require a ZO strategy: the gradient "
+                "baseline differentiates through the weights, but an "
+                "int8 base is frozen (updates live in the f32 delta, "
+                "written by seed replay)")
         if train_cfg.optimizer == "adam":
             if train_cfg.estimator or train_cfg.update:
                 raise ValueError(
@@ -100,6 +110,14 @@ class Trainer:
     def init_params(self) -> PyTree:
         return self.model.init(jax.random.PRNGKey(self.tcfg.seed))
 
+    def _maybe_quantize(self, params: PyTree) -> PyTree:
+        """One-shot base quantization (TrainerConfig.quant). Deltas are
+        attached so every update rule can write the f32 stream; a tree
+        that arrives already quantized passes through."""
+        if self.tcfg.quant == "none" or tree_is_quantized(params):
+            return params
+        return quantize_tree(params, self.tcfg.quant, with_delta=True)
+
     def _mezo_cfg(self) -> MezoConfig:
         c = self.tcfg.mezo
         if self._straggler:
@@ -130,6 +148,7 @@ class Trainer:
         resume = params is None
         if params is None:
             params = self.init_params()
+        params = self._maybe_quantize(params)
         state = self._init_state(params, mcfg)
         if resume and self.ckpt:
             restored, start = self.ckpt.restore(state)

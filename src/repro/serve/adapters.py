@@ -23,6 +23,12 @@ Materializing from records is bit-identical to
 ``CheckpointManager.restore`` for the pristine-base-point estimators
 (vmapdir / fused); the int8 delta form is lossy by one quantization
 roundtrip per leaf.
+
+The shared base may itself be an int8 *quantized* base
+(``optim.quant.quantize_tree``): replay then writes each quantized
+leaf's f32 delta while the int8 values stay frozen and shared, so a
+device serves thousands of users over a ~1 byte/param base -- the
+memory story of the paper's Table 1, composed with personalization.
 """
 
 from __future__ import annotations
@@ -41,7 +47,8 @@ import numpy as np
 from repro.checkpoint.replay_log import ReplayLog
 from repro.core.engine import SGD, UpdateRule
 from repro.core.mezo import MezoConfig
-from repro.optim.compression import int8_dequantize, int8_quantize
+from repro.optim.quant import (int8_dequantize, int8_quantize, is_quantized,
+                               tree_is_quantized, with_delta)
 
 PyTree = Any
 
@@ -163,8 +170,16 @@ class AdapterStore:
         """Replay the whole log through the update rule from a fresh
         state -- identical arithmetic to the live steps (sgd: the classic
         seed-replay sweep; momentum: the history window rolls forward
-        from empty exactly as training rolled it)."""
+        from empty exactly as training rolled it).
+
+        A quantized base (optim/quant.py) works unchanged: the replay
+        writes each quantized leaf's f32 delta while the int8 values
+        stay frozen and shared across every user -- the resident cost of
+        N personalized models is one int8 base plus N delta sets. A
+        frozen (delta-less) base gains zero deltas here first."""
         params, opt = self.base, self.rule.init_fn(self.cfg)
+        if tree_is_quantized(params):
+            params = with_delta(params)
         for rec in records:
             c = dataclasses.replace(self.cfg, lr=rec["lr"], eps=rec["eps"])
             mask = rec.get("mask")
@@ -175,7 +190,21 @@ class AdapterStore:
         return params
 
     def cached_bytes(self) -> int:
-        return sum(tree_bytes(t) for t in self._cache.values())
+        """Bytes the cache actually adds on top of the shared base.
+
+        Quantized leaves in a materialized tree alias the base's int8
+        values and scales by reference (replay only writes the f32
+        delta), so counting them per cached user would evict hot users
+        over phantom bytes -- only the per-user delta is charged."""
+        total = 0
+        for t in self._cache.values():
+            for leaf in jax.tree_util.tree_leaves(t, is_leaf=is_quantized):
+                if is_quantized(leaf):
+                    total += (leaf.delta.nbytes
+                              if leaf.delta is not None else 0)
+                else:
+                    total += tree_bytes(leaf)
+        return total
 
     def _evict(self):
         """Drop least-recently-used materialized trees past the byte
@@ -188,14 +217,23 @@ class AdapterStore:
             self.stats["evictions"] += 1
 
     # ---- compact int8 delta form ----------------------------------------
+    @staticmethod
+    def _eff(leaf):
+        """Effective f32 value of a (possibly quantized) leaf."""
+        return (leaf.dequantize_f32() if is_quantized(leaf)
+                else jnp.asarray(leaf, jnp.float32))
+
     def export_delta(self, user: str) -> list:
         """Compact the adapter into per-leaf int8 ``(q, scale)`` deltas
         against base -- O(params) bytes/8 instead of O(steps) replay work.
-        Lossy (one int8 roundtrip); leaf order is ``jax.tree.leaves``."""
+        Lossy (one int8 roundtrip); leaf order is ``jax.tree.leaves``
+        (quantized leaves atomic: the delta is over effective weights)."""
         mat = self.materialize(user)
         out = []
-        for b, m in zip(jax.tree.leaves(self.base), jax.tree.leaves(mat)):
-            d = jnp.asarray(m, jnp.float32) - jnp.asarray(b, jnp.float32)
+        for b, m in zip(
+                jax.tree.leaves(self.base, is_leaf=is_quantized),
+                jax.tree.leaves(mat, is_leaf=is_quantized)):
+            d = self._eff(m) - self._eff(b)
             q, s = int8_quantize(d)
             out.append((np.asarray(q), float(np.asarray(s))))
         return out
@@ -207,14 +245,21 @@ class AdapterStore:
         self._cache.pop(user, None)
 
     def _apply_delta(self, delta: list) -> PyTree:
-        leaves = jax.tree.leaves(self.base)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            self.base, is_leaf=is_quantized)
         if len(delta) != len(leaves):
             raise ValueError(f"delta has {len(delta)} leaves, base has "
                              f"{len(leaves)}")
-        new = [(jnp.asarray(b, jnp.float32)
-                + int8_dequantize(jnp.asarray(q), s)).astype(b.dtype)
-               for b, (q, s) in zip(leaves, delta)]
-        return jax.tree.unflatten(jax.tree.structure(self.base), new)
+        new = []
+        for b, (q, s) in zip(leaves, delta):
+            d = int8_dequantize(jnp.asarray(q), s)
+            if is_quantized(b):
+                # keep the int8 base resident; the delta stays additive
+                prev = b.delta if b.delta is not None else 0.0
+                new.append(dataclasses.replace(b, delta=prev + d))
+            else:
+                new.append((jnp.asarray(b, jnp.float32) + d).astype(b.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new)
 
     def save_delta(self, user: str, path: str) -> int:
         if not path.endswith(".npz"):      # np.savez appends it silently

@@ -1,0 +1,425 @@
+"""Quantized-base runtime: quantize/dequant roundtrip properties, fused
+dequant+perturb kernel parity, update/replay semantics over int8 bases.
+
+The hypothesis property suites need the optional ``hypothesis`` dep and
+auto-skip without it (like tests/test_property.py); the deterministic
+tests below them always run.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import MezoConfig, PerturbCtx, add_scaled_z, build_strategy
+from repro.core import rng as zrng
+from repro.kernels import ops
+from repro.optim import compression
+from repro.optim.quant import (QuantizedLeaf, default_quantizable, deq,
+                               dequantize_tree, is_quantized, quantize_leaf,
+                               quantize_tree, quantized_bytes, take_rows,
+                               tree_is_quantized, with_delta)
+from repro.serve.adapters import AdapterStore
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_tree(seed=1):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    return {
+        "a": {"w": jax.random.normal(ks[0], (16, 8), jnp.float32) * 0.1},
+        "blocks": {"ln": jax.random.normal(ks[1], (2, 8), jnp.float32),
+                   "w": jax.random.normal(ks[2], (2, 8, 16),
+                                          jnp.float32) * 0.1},
+        "b": jax.random.normal(ks[3], (8,), jnp.float32) * 0.1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# deterministic structure / edge-case tests
+
+
+def test_quantize_tree_structure_and_bytes():
+    tree = _tiny_tree()
+    qt = quantize_tree(tree)
+    assert is_quantized(qt["a"]["w"])
+    assert is_quantized(qt["blocks"]["w"])       # stacked rank-3: matrix
+    assert not is_quantized(qt["blocks"]["ln"])  # stacked rank-2: vector
+    assert not is_quantized(qt["b"])             # rank-1
+    # stacked leaves keep the leading layer axis on values AND scales
+    assert qt["blocks"]["w"].q.shape == (2, 8, 16)
+    assert qt["blocks"]["w"].scale.shape == (2, 16)
+    resident, f32_eq = quantized_bytes(qt)
+    assert resident < f32_eq
+    assert tree_is_quantized(qt) and not tree_is_quantized(tree)
+
+
+def test_quantize_tree_mode_none_and_unknown():
+    tree = _tiny_tree()
+    assert quantize_tree(tree, "none") is tree
+    with pytest.raises(ValueError, match="int8"):
+        quantize_tree(tree, "int4")
+
+
+def test_router_leaves_stay_f32():
+    w = jax.random.normal(KEY, (8, 4), jnp.float32)
+    assert not default_quantizable("blocks/moe/router", w)
+    assert default_quantizable("lm_head/w", w)
+
+
+def test_zero_and_denormal_columns_roundtrip_exact():
+    w = jax.random.normal(KEY, (32, 4), jnp.float32).at[:, 1].set(0.0)
+    w = w.at[:, 2].set(1e-42)        # denormal column
+    ql = quantize_leaf(w)
+    back = np.asarray(ql.dequantize())
+    assert np.all(back[:, 1] == 0.0)
+    assert np.all(np.abs(back[:, 2]) <= 1e-40)   # flushed to ~0, no NaNs
+    assert not np.any(np.isnan(back))
+
+
+def test_outlier_column_does_not_poison_neighbors():
+    w = jax.random.normal(KEY, (64, 4), jnp.float32) * 0.01
+    w = w.at[:, 3].mul(1e4)          # one outlier column
+    ql = quantize_leaf(w)
+    err = np.abs(np.asarray(ql.dequantize()) - np.asarray(w))
+    scale = np.asarray(ql.scale)
+    # per-channel scales: each column's error is bounded by ITS scale
+    for j in range(4):
+        assert err[:, j].max() <= 0.5 * scale[j] * (1 + 1e-5) + 1e-9
+
+
+def test_take_rows_matches_full_dequant():
+    table = jax.random.normal(KEY, (32, 8), jnp.float32) * 0.1
+    qt = quantize_leaf(table)
+    ids = jnp.asarray([0, 5, 31, 5])
+    np.testing.assert_array_equal(
+        np.asarray(take_rows(qt, ids)),
+        np.asarray(qt.dequantize()[ids]))
+    # plain arrays pass through
+    np.testing.assert_array_equal(np.asarray(take_rows(table, ids)),
+                                  np.asarray(table[ids]))
+
+
+def test_add_scaled_z_writes_delta_with_the_leafs_own_salt():
+    """The z-field of a quantized leaf must be its f32 counterpart's:
+    salt from the leaf path (never .../q), update landing in delta."""
+    tree = _tiny_tree()
+    qt = with_delta(quantize_tree(tree))
+    seed, coeff = jnp.uint32(7), 0.25
+    up_q = add_scaled_z(qt, seed, coeff)
+    up_f = add_scaled_z(tree, seed, coeff)
+    for path, want in (("a/w", up_f["a"]["w"] - tree["a"]["w"]),
+                       ("blocks/w", up_f["blocks"]["w"]
+                        - tree["blocks"]["w"])):
+        node = up_q
+        for part in path.split("/"):
+            node = node[part]
+        np.testing.assert_allclose(np.asarray(node.delta), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+    # frozen (delta-less) leaves pass through untouched
+    frozen = add_scaled_z(quantize_tree(tree), seed, coeff)
+    assert frozen["a"]["w"].delta is None
+    np.testing.assert_array_equal(np.asarray(frozen["a"]["w"].q),
+                                  np.asarray(qt["a"]["w"].q))
+
+
+def test_weight_decay_folds_into_delta_and_preserves_pow2_scales():
+    """Weight decay must never touch q or scale (a decayed scale is no
+    longer a power of two, which would break the exact-product property
+    the atol=0 parity rests on): (q*s + d)(1-c) folds into the delta."""
+    from repro.core.engine import _decay
+
+    tree = _tiny_tree()
+    qt = with_delta(quantize_tree(tree))
+    qt["a"]["w"] = dataclasses.replace(
+        qt["a"]["w"], delta=qt["a"]["w"].delta + 0.5)
+    wd = jnp.float32(0.125)
+    dec = _decay(qt, wd)
+    lf = dec["a"]["w"]
+    np.testing.assert_array_equal(np.asarray(lf.q),
+                                  np.asarray(qt["a"]["w"].q))
+    np.testing.assert_array_equal(np.asarray(lf.scale),
+                                  np.asarray(qt["a"]["w"].scale))
+    np.testing.assert_allclose(
+        np.asarray(lf.dequantize_f32()),
+        np.asarray(qt["a"]["w"].dequantize_f32()) * (1.0 - 0.125),
+        rtol=1e-6, atol=1e-7)
+    # frozen (delta-less) leaves pass through decay untouched
+    froz = _decay(quantize_tree(tree), wd)["a"]["w"]
+    assert froz.delta is None
+    np.testing.assert_array_equal(np.asarray(froz.scale),
+                                  np.asarray(qt["a"]["w"].scale))
+
+
+def test_lru_budget_charges_only_per_user_delta_over_quantized_base():
+    """Materialized trees alias the base's int8 values/scales by
+    reference; the cache budget must charge only the per-user f32
+    deltas (+ unquantized leaves), or hot users evict over phantom
+    bytes of the shared base."""
+    base = quantize_tree(_tiny_tree())
+    cfg = MezoConfig(eps=1e-3, lr=1e-2, n_directions=2)
+    store = AdapterStore(base, cfg)
+    store.put("u", [{"step": 0, "seed": 5, "gs": [0.1, -0.1],
+                     "lr": 1e-2, "eps": 1e-3}])
+    mat = store.materialize("u")
+    want = sum(
+        (l.delta.nbytes if is_quantized(l) else l.nbytes)
+        for l in jax.tree_util.tree_leaves(mat, is_leaf=is_quantized))
+    assert store.cached_bytes() == want
+    # the shared base's int8/scale bytes are NOT in the charge
+    q_bytes = sum(l.q.nbytes + l.scale.nbytes
+                  for l in jax.tree_util.tree_leaves(
+                      mat, is_leaf=is_quantized) if is_quantized(l))
+    assert store.cached_bytes() < want + q_bytes
+
+
+def test_quantized_leaf_scan_slices_scale_with_values():
+    """lax.scan over a stacked QuantizedLeaf must slice q, scale, and
+    delta together (the runtime's layer-scan contract)."""
+    ql = with_delta(quantize_leaf(
+        jax.random.normal(KEY, (3, 8, 16), jnp.float32)))
+
+    def body(c, leaf):
+        assert leaf.q.shape == (8, 16)
+        assert leaf.scale.shape == (16,)
+        assert leaf.delta.shape == (8, 16)
+        return c, jnp.sum(leaf.dequantize_f32())
+
+    _, sums = jax.lax.scan(body, 0, ql)
+    np.testing.assert_allclose(
+        np.asarray(sums),
+        np.asarray(jnp.sum(ql.dequantize_f32(), axis=(1, 2))), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel parity (quantized zo_matmul / zo_add vs dequantize-then-op)
+
+MM_SHAPES = [(8, 128, 128), (16, 96, 160), (7, 33, 130)]
+
+
+@pytest.mark.parametrize("dist", ["rademacher", "gaussian"])
+@pytest.mark.parametrize("coeff", [0.01, -0.01])
+@pytest.mark.parametrize("mkn", MM_SHAPES)
+def test_quantized_zo_matmul_matches_dequant_then_matmul(mkn, dist, coeff):
+    m, k, n = mkn
+    x = jax.random.normal(KEY, (m, k), jnp.float32) * 0.1
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n),
+                          jnp.float32) * 0.1
+    ql = quantize_leaf(w)
+    got = ops.zo_matmul(x, ql.q, 7, 123, coeff, dist=dist, scale=ql.scale)
+    want = ops.zo_matmul(x, ql.dequantize(), 7, 123, coeff, dist=dist)
+    # atol tied to the scale: k accumulations of values quantized to
+    # multiples of scale/127 -- identical tiles, so only roundoff is left
+    atol = float(np.max(ql.scale)) * k * 1e-6 + 1e-6
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=atol)
+
+
+@pytest.mark.parametrize("dist", ["rademacher", "gaussian"])
+@pytest.mark.parametrize("coeff", [0.01, -0.01])
+def test_quantized_zo_add_matches_dequant_plus_z(dist, coeff):
+    w = jax.random.normal(KEY, (64, 256), jnp.float32) * 0.1
+    ql = quantize_leaf(w)
+    got = ops.zo_add(ql.q, 7, 123, coeff, dist=dist, scale=ql.scale)
+    z = zrng.z_field(jnp.uint32(7), 123, w.shape, dist=dist)
+    want = ql.dequantize() + jnp.float32(coeff) * z
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_ctx_matmul_kernel_path_matches_jnp_fallback():
+    """PerturbCtx.matmul over an aligned quantized leaf: the fused
+    Pallas kernel (dequant in VMEM) vs the jnp transient."""
+    w = jax.random.normal(KEY, (64, 128), jnp.float32) * 0.1
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 64),
+                          jnp.float32) * 0.1
+    ql = quantize_leaf(w)
+    for coeff in (1e-3, -1e-3):
+        kctx = PerturbCtx(seed=jnp.uint32(5), coeff=jnp.float32(coeff),
+                          use_kernel=True, prefix="lm_head")
+        jctx = dataclasses.replace(kctx, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(kctx.matmul(x, ql)),
+                                   np.asarray(jctx.matmul(x, ql)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# serving: adapters / checkpoints over a quantized base
+
+
+def _quant_base(seed=1):
+    return quantize_tree(_tiny_tree(seed))
+
+
+def _qloss(p, _):
+    return (jnp.sum(deq(p["a"]["w"]).astype(jnp.float32) ** 2) * 1e-3
+            + jnp.sum(deq(p["blocks"]["w"]).astype(jnp.float32) ** 2) * 1e-3
+            + jnp.sum(p["b"] ** 2) * 1e-3)
+
+
+def test_adapter_materialize_matches_checkpoint_restore_quantized(tmp_path):
+    """AdapterStore.materialize over an int8 base must be bit-identical
+    to CheckpointManager.restore over the same base -- the no-format-
+    change contract of the quantized runtime."""
+    base = _quant_base()
+    cfg = MezoConfig(eps=1e-3, lr=1e-2, n_directions=2)
+    strat = build_strategy("vmapdir", "sgd")
+    mgr = CheckpointManager(str(tmp_path), mezo_cfg=cfg, snapshot_every=4,
+                            update_rule=strat.update)
+    state = strat.init_state(with_delta(base), cfg)
+    for step in range(9):
+        state, aux = strat.step(_qloss, state, None, jnp.uint32(step), cfg)
+        mgr.on_step(step, state, aux)
+
+    like = strat.init_state(with_delta(base), cfg)
+    restored, nxt = CheckpointManager(
+        str(tmp_path), mezo_cfg=cfg, snapshot_every=4,
+        update_rule=strat.update).restore(like)
+    assert nxt == 9
+
+    store = AdapterStore(base, cfg)
+    store.import_checkpoint("u", str(tmp_path))
+    mat = store.materialize("u")
+    for a, b, live in zip(jax.tree.leaves(mat),
+                          jax.tree.leaves(restored.params),
+                          jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(live))
+    # the int8 base itself never moved
+    np.testing.assert_array_equal(np.asarray(mat["a"]["w"].q),
+                                  np.asarray(base["a"]["w"].q))
+
+
+def test_adapter_int8_delta_compaction_over_quantized_base():
+    base = _quant_base()
+    cfg = MezoConfig(eps=1e-3, lr=1e-2, n_directions=2)
+    store = AdapterStore(base, cfg)
+    store.put("u", [{"step": t, "seed": 11 + t, "gs": [0.3, -0.2],
+                     "lr": 1e-2, "eps": 1e-3} for t in range(4)])
+    mat = store.materialize("u")
+    compact = AdapterStore(base, cfg)
+    compact.put_delta("u", store.export_delta("u"))
+    approx = compact.materialize("u")
+    for a, b, bb in zip(jax.tree.leaves(mat, is_leaf=is_quantized),
+                        jax.tree.leaves(approx, is_leaf=is_quantized),
+                        jax.tree.leaves(base, is_leaf=is_quantized)):
+        av = a.dequantize_f32() if is_quantized(a) else a
+        bv = b.dequantize_f32() if is_quantized(b) else b
+        bbv = bb.dequantize_f32() if is_quantized(bb) else bb
+        # one int8 roundtrip of the (mat - base) delta per leaf
+        d = np.abs(np.asarray(av, np.float32) - np.asarray(bbv, np.float32))
+        np.testing.assert_allclose(np.asarray(bv, np.float32),
+                                   np.asarray(av, np.float32),
+                                   atol=float(d.max()) / 127.0 + 1e-7)
+
+
+def test_int8_helpers_are_the_single_quant_copy():
+    """The dedup satellite: compression.py re-exports optim/quant.py's
+    helpers, so delta compaction bytes are unchanged by construction."""
+    from repro.optim import quant
+    assert compression.int8_quantize is quant.int8_quantize
+    assert compression.int8_dequantize is quant.int8_dequantize
+
+
+def test_dequantize_tree_passthrough_and_effective_values():
+    tree = _tiny_tree()
+    qt = quantize_tree(tree)
+    dq = dequantize_tree(qt)
+    assert not tree_is_quantized(dq)
+    np.testing.assert_array_equal(np.asarray(dq["a"]["w"]),
+                                  np.asarray(qt["a"]["w"].dequantize()))
+    # plain leaves and plain trees pass through by identity
+    assert dq["b"] is qt["b"]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property suites (auto-skip without the optional dep; the
+# guard is per-section so the deterministic tests above ALWAYS run)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                               # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=25, deadline=None)
+
+    @given(rows=st.integers(1, 48), cols=st.integers(1, 8),
+           seed=st.integers(0, 2**31 - 1),
+           log_mag=st.floats(-30.0, 20.0))
+    @settings(**SETTINGS)
+    def test_roundtrip_error_bounded_by_half_scale(rows, cols, seed,
+                                                   log_mag):
+        """|dequant(quant(w)) - w| <= scale/2 per channel, for
+        magnitudes from denormal-adjacent to huge."""
+        w = (np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                          (rows, cols)))
+             * np.exp(log_mag)).astype(np.float32)
+        ql = quantize_leaf(jnp.asarray(w))
+        err = np.abs(np.asarray(ql.dequantize()) - w)
+        # 0.5*scale from rounding plus a few ulps of f32 div/mul roundoff
+        bound = 0.5 * np.asarray(ql.scale)[None, :] * (1 + 1e-4) + 1e-30
+        assert np.all(err <= bound), (err.max(), bound.max())
+
+    @given(rows=st.integers(2, 32), cols=st.integers(1, 6),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_per_channel_scale_is_pow2_absmax_over_contraction_axis(
+            rows, cols, seed):
+        """scale = absmax/127 over axis -2, rounded UP to a power of two
+        (exactness contract: q*scale must be exact in f32) -- so within
+        [1x, 2x] of the optimal absmax scale, and exactly 2^k."""
+        w = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                         (rows, cols)), np.float32)
+        ql = quantize_leaf(jnp.asarray(w))
+        scale = np.asarray(ql.scale)
+        absmax = np.max(np.abs(w), axis=0)
+        lo = absmax / 127.0
+        assert np.all(scale >= lo * (1 - 1e-6))
+        assert np.all(scale <= np.maximum(2.0 * lo, 1.0) * (1 + 1e-6))
+        mant, _ = np.frexp(scale)
+        assert np.all(mant == 0.5)      # exactly a power of two
+
+    @pytest.mark.slow
+    @given(m=st.integers(1, 16), k=st.integers(1, 96),
+           n=st.integers(1, 144), seed=st.integers(0, 2**31 - 1),
+           dist=st.sampled_from(["rademacher", "gaussian"]),
+           sign=st.sampled_from([1.0, -1.0]))
+    @settings(max_examples=20, deadline=None)
+    def test_quantized_zo_matmul_property_parity(m, k, n, seed, dist, sign):
+        """Quantized fused kernel == dequantize-then-zo_matmul for
+        arbitrary shapes (interpret mode exercises the real tiling),
+        ± coeff, both dists -- atol tied to the per-channel scale."""
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (m, k), jnp.float32) * 0.1
+        w = jax.random.normal(kw, (k, n), jnp.float32) * 0.1
+        ql = quantize_leaf(w)
+        coeff = sign * 0.01
+        got = ops.zo_matmul(x, ql.q, seed, 77, coeff, dist=dist,
+                            scale=ql.scale)
+        want = ops.zo_matmul(x, ql.dequantize(), seed, 77, coeff, dist=dist)
+        atol = float(np.max(ql.scale)) * k * 1e-6 + 1e-6
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=atol)
+
+    @pytest.mark.slow
+    @given(rows=st.integers(1, 32), cols=st.integers(1, 64),
+           seed=st.integers(0, 2**31 - 1),
+           dist=st.sampled_from(["rademacher", "gaussian"]),
+           sign=st.sampled_from([1.0, -1.0]))
+    @settings(max_examples=20, deadline=None)
+    def test_quantized_zo_add_property_parity(rows, cols, seed, dist, sign):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols),
+                              jnp.float32) * 0.1
+        ql = quantize_leaf(w)
+        coeff = sign * 0.01
+        got = ops.zo_add(ql.q, seed, 99, coeff, dist=dist, scale=ql.scale)
+        z = zrng.z_field(jnp.uint32(seed), 99, w.shape, dist=dist)
+        want = ql.dequantize() + jnp.float32(coeff) * z
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)

@@ -7,10 +7,13 @@ tests/golden/capture_goldens.py). Any numerical drift in the generic
 backbone engine -- block order, norm placement, ctx scoping, cache
 layout -- names the family it broke.
 
-Also asserts the two contracts the refactor introduced:
+Also asserts the contracts the refactors introduced:
   * fused-vs-materialize loss bit-closeness (atol=0 in f32) for the
     families that previously fell back to a transient perturbed copy;
-  * the unified StateCache invariant (every leaf (n_layers, B, ...)).
+  * the unified StateCache invariant (every leaf (n_layers, B, ...));
+  * the quantized-base arms: int8-base logits within a documented
+    tolerance of the f32 goldens for every family, and quantized fused
+    loss bit-equal (atol=0) to the materialized dequant(Wq)+eps*z loss.
 
 Set REPRO_FAMILY=<family[,family]> to restrict to one family (the CI
 family-matrix job does).
@@ -31,6 +34,7 @@ import capture_goldens as cg  # noqa: E402  (the single source of batch/arch def
 from repro.configs import get_config            # noqa: E402
 from repro.core import PerturbCtx               # noqa: E402
 from repro.models import build_model            # noqa: E402
+from repro.optim.quant import quantize_tree     # noqa: E402
 
 with open(os.path.join(os.path.dirname(__file__), "golden",
                        "runtime_parity.json")) as f:
@@ -110,6 +114,50 @@ def test_fused_loss_bit_equals_materialize(arch):
         ctx = PerturbCtx(seed=jnp.uint32(seed), coeff=jnp.float32(coeff))
         fused = model.loss(params, batch, perturb=ctx)
         mat = model.loss(ctx.materialize(params), batch)
+        np.testing.assert_array_equal(np.asarray(fused, np.float32),
+                                      np.asarray(mat, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quantized-base arms (int8 base, optim/quant.py)
+
+#: documented tolerance of the int8 quantized forward vs the f32
+#: goldens: per-channel absmax quantization bounds each weight's error
+#: by scale/2 ~ absmax/254 (~0.4% of the channel absmax); measured
+#: relative-L2 logit deviation across the five reduced families is
+#: 0.9-1.5%, so 5% gives ~3x headroom without masking real breakage.
+QUANT_LOGIT_REL_L2 = 0.05
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_quantized_forward_within_tolerance_of_goldens(arch):
+    """int8-base forward logits for every family stay within the
+    documented relative-L2 tolerance of the pinned f32 goldens."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = cg.make_batch(cfg, jax.random.PRNGKey(1))
+    logits, _ = model.forward(quantize_tree(params), batch)
+    got = np.asarray(logits[:, -1, :], np.float32)
+    want = np.asarray(GOLDEN[arch]["logits_last"], np.float32)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < QUANT_LOGIT_REL_L2, f"{arch}: rel L2 {rel:.4f}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_quantized_fused_loss_bit_equals_materialize(arch):
+    """Acceptance: the quantized fused loss (dequant + perturbation at
+    every use site) is bit-identical (atol=0, f32 accumulation) to the
+    loss at a materialized ``dequant(Wq) + eps*z`` copy -- in every
+    family, both coefficient signs."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    qparams = quantize_tree(model.init(jax.random.PRNGKey(0)))
+    batch = cg.make_batch(cfg, jax.random.PRNGKey(1))
+    for seed, coeff in ((3, 1e-3), (11, -1e-3)):
+        ctx = PerturbCtx(seed=jnp.uint32(seed), coeff=jnp.float32(coeff))
+        fused = model.loss(qparams, batch, perturb=ctx)
+        mat = model.loss(ctx.materialize(qparams), batch)
         np.testing.assert_array_equal(np.asarray(fused, np.float32),
                                       np.asarray(mat, np.float32))
 

@@ -71,3 +71,39 @@ def test_straggler_trainer_arm():
     tr = Trainer(CFG, tc, _batches())
     tr.train()
     assert len(tr.losses) == 3
+
+
+def test_unknown_quant_mode_raises_with_supported_list():
+    """Mirrors the estimator/update registry errors: an unknown --quant
+    value must raise a ValueError naming the supported modes."""
+    with pytest.raises(ValueError, match=r"int4.*none.*int8"):
+        Trainer(CFG, TrainerConfig(quant="int4"), _batches())
+
+
+def test_quant_rejects_gradient_baseline():
+    with pytest.raises(ValueError, match="frozen"):
+        Trainer(CFG, TrainerConfig(optimizer="adam", quant="int8"),
+                _batches())
+
+
+def test_quantized_trainer_arm_runs_and_freezes_base():
+    """--quant int8 end to end on the fused strategy: losses flow, the
+    int8 values stay bit-frozen, the update stream lands in the deltas."""
+    from repro.optim.quant import is_quantized, quantize_tree
+
+    tc = TrainerConfig(optimizer="mezo-fused", quant="int8",
+                       mezo=MezoConfig(eps=1e-2, lr=1e-2, n_directions=2),
+                       n_steps=3, log_every=100)
+    tr = Trainer(CFG, tc, _batches())
+    trained = tr.train()
+    assert len(tr.losses) == 3
+    q0 = quantize_tree(tr.model.init(jax.random.PRNGKey(tc.seed)))
+    moved = 0.0
+    for a, b in zip(jax.tree.leaves(trained, is_leaf=is_quantized),
+                    jax.tree.leaves(q0, is_leaf=is_quantized)):
+        if is_quantized(a):
+            np.testing.assert_array_equal(np.asarray(a.q), np.asarray(b.q))
+            np.testing.assert_array_equal(np.asarray(a.scale),
+                                          np.asarray(b.scale))
+            moved += float(np.abs(np.asarray(a.delta)).sum())
+    assert moved > 0.0
