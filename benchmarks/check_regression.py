@@ -1,0 +1,123 @@
+"""Bench-regression gate over the committed experiments/bench JSONs.
+
+The benchmark modules (tables 1-4) each write a JSON artifact that is
+committed with the PR that produced it. This check validates those
+artifacts -- presence, schema, and the paper-level invariants each table
+exists to demonstrate -- so a refactor that silently regresses a
+headline claim (MeZO's memory edge, the fused prefill win, the
+multi-tenant engine's batched speedup) fails CI even when no test
+exercises the perf path.
+
+Invariant thresholds are deliberately slack (absolute CPU numbers are
+noisy across machines); what they pin is the *direction and rough
+magnitude* of each table's claim:
+
+  table1: MeZO inference-parity memory stays under Adam's
+  table2: MeZO wall-clock/step stays under Adam's (bs8 arm)
+  table3: fused prefill > 2x the per-token loop; adapter cache hits are
+          orders-of-magnitude cheaper than cold replays
+  table4: batched TrainEngine > 2x sequential user-steps/s (both arms);
+          int8 resident base stays smaller than one user's f32 delta
+
+  PYTHONPATH=src python -m benchmarks.check_regression [--dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+FAILURES: list = []
+
+
+def _check(name: str, ok: bool, detail: str):
+    print(f"  {'ok  ' if ok else 'FAIL'} {name}: {detail}")
+    if not ok:
+        FAILURES.append(name)
+
+
+def _load(bench_dir: str, fname: str):
+    path = os.path.join(bench_dir, fname)
+    if not os.path.exists(path):
+        _check(fname, False, "artifact missing (run benchmarks and commit)")
+        return None
+    with open(path) as f:
+        try:
+            return json.load(f)
+        except json.JSONDecodeError as e:
+            _check(fname, False, f"unparseable JSON: {e}")
+            return None
+
+
+def check_table1(bench_dir: str):
+    t = _load(bench_dir, "table1_memory.json")
+    if t is None:
+        return
+    for bs in ("bs8", "bs64"):
+        mezo, adam = t.get(f"live/mezo/{bs}"), t.get(f"live/adam/{bs}")
+        ok = mezo is not None and adam is not None and mezo < adam
+        _check(f"table1/live_{bs}", ok,
+               f"mezo {mezo} MB vs adam {adam} MB (mezo must be lower)")
+
+
+def check_table2(bench_dir: str):
+    t = _load(bench_dir, "table2_walltime.json")
+    if t is None:
+        return
+    mezo, adam = t.get("mezo/bs8"), t.get("adam/bs8")
+    ok = mezo is not None and adam is not None and mezo < adam
+    _check("table2/step_bs8", ok,
+           f"mezo {mezo} us vs adam {adam} us (mezo must be faster)")
+
+
+def check_table3(bench_dir: str):
+    t = _load(bench_dir, "table3_serving.json")
+    if t is None:
+        return
+    pf = t.get("prefill", {})
+    _check("table3/prefill_speedup", pf.get("speedup", 0) > 2.0,
+           f"fused prefill {pf.get('speedup')}x over loop (need > 2x)")
+    ad = t.get("adapter", {})
+    cold, hit = ad.get("cold_s"), ad.get("hit_s")
+    ok = cold is not None and hit is not None and hit < cold / 100
+    _check("table3/adapter_cache", ok,
+           f"cache hit {hit}s vs cold replay {cold}s (need > 100x)")
+
+
+def check_table4(bench_dir: str):
+    t = _load(bench_dir, "table4_multitenant.json")
+    if t is None:
+        return
+    for arm in ("f32", "int8"):
+        a = t.get(arm, {})
+        _check(f"table4/{arm}_speedup", a.get("speedup", 0) > 2.0,
+               f"engine {a.get('engine_user_steps_per_s')} vs sequential "
+               f"{a.get('seq_user_steps_per_s')} user-steps/s = "
+               f"{a.get('speedup')}x (need > 2x)")
+    q = t.get("int8", {})
+    bb, db = q.get("base_bytes"), q.get("delta_bytes_per_user")
+    ok = bb is not None and db is not None and 0 < bb < db
+    _check("table4/int8_resident", ok,
+           f"shared int8 base {bb} B vs f32 delta/user {db} B "
+           f"(base must be the smaller resident share)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/bench",
+                    help="directory holding the committed bench JSONs")
+    args = ap.parse_args()
+    print(f"[check_regression] validating artifacts under {args.dir}")
+    for fn in (check_table1, check_table2, check_table3, check_table4):
+        fn(args.dir)
+    if FAILURES:
+        print(f"[check_regression] {len(FAILURES)} failure(s): "
+              f"{', '.join(FAILURES)}")
+        sys.exit(1)
+    print("[check_regression] all bench invariants hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV (one row per measurement) and
 writes artifacts under experiments/bench/.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1|table2|fig1|roofline]
+  PYTHONPATH=src python -m benchmarks.run \
+      [--only table1|table2|table3|table4|fig1|roofline]
 """
 
 import argparse
@@ -17,11 +18,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_loss, roofline, table1_memory,
-                            table2_walltime, table3_serving)
+                            table2_walltime, table3_serving,
+                            table4_multitenant)
     mods = {
         "table1": table1_memory,
         "table2": table2_walltime,
         "table3": table3_serving,
+        "table4": table4_multitenant,
         "fig1": fig1_loss,
         "roofline": roofline,
     }

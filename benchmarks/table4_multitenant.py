@@ -1,0 +1,139 @@
+"""Table 4 (multi-tenant training): batched TrainEngine vs sequential
+per-user fine-tunes.
+
+PocketLLM fine-tunes one user on one phone; a server aggregating many
+users' ZO fine-tunes wants B of them per dispatch. This table measures
+the user-steps/s of the batched TrainEngine (one vmapped fused step
+advancing every resident slot) against B sequential Trainer-equivalent
+runs of identical arithmetic -- the engine's outputs are bit-identical
+per user (tests/test_train_engine.py), so the speedup is free.
+
+The int8 arm also accounts the resident-memory story: U tenants share
+ONE quantized base (q + scales); per-user state is only the f32 deltas.
+
+Reduced-config CPU numbers (same caveat as tables 2/3: relative effects
+are what transfer; on TPU the batched win grows with the MXU's appetite
+for the user axis).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import MezoConfig
+from repro.core.engine import build_strategy
+from repro.core import rng as zrng
+from repro.models import build_model
+from repro.optim.quant import is_quantized, quantize_tree
+from repro.serve.adapters import AdapterStore, tree_bytes
+from repro.train import TrainEngine, TrainJob, derive_user_seed
+
+U, T, B, S = 8, 5, 1, 16      # users, steps/user, batch, seq
+
+
+def _batches(cfg, user: str, seed: int = 0):
+    salt = zrng.leaf_salt(f"{seed}/{user}")
+
+    def fn(step: int):
+        rng = np.random.default_rng((salt, step))
+        toks = rng.integers(0, cfg.vocab, (B, S + 1), dtype=np.int32)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:],
+                "loss_mask": np.ones((B, S), np.float32)}
+    return fn
+
+
+def _delta_bytes(tree) -> int:
+    """Per-user f32 delta bytes of a quantized tree (the only per-user
+    state when the int8 base is shared)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_quantized):
+        if is_quantized(leaf) and leaf.delta is not None:
+            total += leaf.delta.nbytes
+    return total
+
+
+def run(out_dir="experiments/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    mz = MezoConfig(eps=1e-3, lr=1e-4, n_directions=1)
+    strat = build_strategy("fused", "sgd")
+    base_f32 = model.init(jax.random.PRNGKey(0))
+    rows, table = [], {"users": U, "steps": T, "batch": B, "seq": S}
+
+    for arm in ("f32", "int8"):
+        base = (base_f32 if arm == "f32"
+                else quantize_tree(base_f32, with_delta=True))
+
+        # -- sequential: U independent runs, identical arithmetic ---------
+        def seq_wave(wave: int):
+            for u in range(U):
+                user = f"w{wave}-{u}"
+                st = strat.init_state(jax.tree.map(
+                    lambda x: x.copy() if hasattr(x, "copy") else x,
+                    jax.tree.map(jnp.asarray, base)), mz)
+                fn = _batches(cfg, user)
+                us = np.uint32(derive_user_seed(0, user))
+                for t in range(T):
+                    seed = zrng.fold_seed(jnp.uint32(us), t)
+                    st, aux = strat.step(model.loss, st, fn(t), seed, mz)
+                jax.block_until_ready(aux.loss)
+
+        seq_wave(0)                                   # compile
+        t0 = time.perf_counter()
+        seq_wave(1)
+        seq_s = time.perf_counter() - t0
+        seq_ups = U * T / seq_s
+
+        # -- batched engine: one wave warms the jit, the next is timed ----
+        store = AdapterStore(jax.tree.map(jnp.asarray, base), mezo_cfg=mz)
+        eng = TrainEngine(cfg, store, n_slots=U, seed=0)
+
+        def eng_wave(wave: int):
+            for u in range(U):
+                user = f"w{wave}-{u}"
+                eng.submit(TrainJob(user=user,
+                                    batches=_batches(cfg, user), n_steps=T))
+            eng.run()
+
+        eng_wave(0)                                   # compile
+        t0 = time.perf_counter()
+        eng_wave(1)
+        eng_s = time.perf_counter() - t0
+        eng_ups = U * T / eng_s
+        speedup = eng_ups / seq_ups
+
+        rows.append((f"table4/{arm}_sequential", seq_s / (U * T) * 1e6,
+                     f"{seq_ups:.2f} user-steps/s ({U} lone runs)"))
+        rows.append((f"table4/{arm}_engine", eng_s / (U * T) * 1e6,
+                     f"{eng_ups:.2f} user-steps/s ({speedup:.1f}x, "
+                     f"{U} slots/dispatch)"))
+        table[arm] = {"seq_user_steps_per_s": seq_ups,
+                      "engine_user_steps_per_s": eng_ups,
+                      "speedup": speedup}
+
+        if arm == "int8":
+            db = _delta_bytes(store.base)
+            bb = tree_bytes(store.base) - db    # q + scales only
+            rows.append(("table4/int8_resident_base", 0.0,
+                         f"{bb / 1e6:.2f} MB shared + "
+                         f"{db / 1e6:.2f} MB f32 delta/user"))
+            table[arm].update({"base_bytes": bb,
+                               "delta_bytes_per_user": db,
+                               "f32_base_bytes": tree_bytes(base_f32)})
+
+    with open(os.path.join(out_dir, "table4_multitenant.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -1,0 +1,156 @@
+"""User-axis batching helpers shared by the serve and train engines.
+
+Both engines run a fixed slot table over one resident base model and
+advance many tenants per dispatch; what varies is only *where* the slot
+axis lives (the TrainEngine stacks per-user state on axis 0, the
+ServeEngine's unified StateCache batches sequences on axis 1). This
+module is the single copy of the slot-axis plumbing:
+
+* :func:`masked_merge` — the ragged-slot merge both engines use: keep a
+  slot's previous value wherever its mask bit is off (mid-flight
+  admission, early finishers, per-adapter decode dispatch);
+* :func:`user_leaf_axes` / :func:`user_state_axes` — ``vmap`` axes trees
+  for user-stacked params / TrainState where every per-user leaf maps to
+  axis 0 but quantized leaves keep the single resident int8 base
+  (``q`` / ``scale`` -> ``None``: shared, never copied per user);
+* :func:`stack_users` / :func:`install_user` / :func:`take_user` — build
+  a user-stacked pytree from per-user trees, scatter one user into a
+  slot lane, and read one lane back out.
+
+The quantized-leaf convention throughout: ``q``/``scale`` are frozen and
+shared across all users (PR 5's single resident int8 base), only the f32
+``delta`` carries per-user state — so U tenants cost one int8 base plus
+U delta sets, and a delta-less (frozen) leaf has no per-user axis at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quant import QuantizedLeaf, is_quantized
+
+PyTree = Any
+
+
+def masked_merge(old: PyTree, new: PyTree, mask, axis: int = 0) -> PyTree:
+    """Per-slot select: ``new`` where ``mask``, ``old`` elsewhere.
+
+    ``mask`` is a (n_slots,) boolean vector; ``axis`` is the slot axis of
+    every leaf (0 for user-stacked train state, 1 for the serve engines'
+    unified StateCache). Quantized leaves merge only their per-user f32
+    ``delta`` — the int8 base is shared, so there is nothing to mask —
+    and frozen (delta-less) leaves pass through whole.
+    """
+    mask = jnp.asarray(mask, bool)
+
+    def pick(o, n):
+        if is_quantized(o):
+            if o.delta is None:
+                return n
+            return dataclasses.replace(n, delta=pick(o.delta, n.delta))
+        m = jnp.reshape(mask, (1,) * axis + (-1,)
+                        + (1,) * (o.ndim - axis - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(pick, old, new, is_leaf=is_quantized)
+
+
+# ---------------------------------------------------------------------------
+# vmap axes trees (user axis 0; quantized base shared)
+
+
+def user_leaf_axes(params: PyTree) -> PyTree:
+    """vmap in/out axes for a user-stacked params tree: plain leaves map
+    over axis 0; quantized leaves map only their ``delta`` (``q`` and
+    ``scale`` stay ``None`` — ONE resident int8 base serves every lane)."""
+    def ax(leaf):
+        if is_quantized(leaf):
+            return QuantizedLeaf(q=None, scale=None,
+                                 delta=None if leaf.delta is None else 0,
+                                 orig_dtype=leaf.orig_dtype)
+        return 0
+    return jax.tree.map(ax, params, is_leaf=is_quantized)
+
+
+def user_state_axes(state) -> Any:
+    """Axes tree for a user-stacked ``TrainState`` (params per
+    :func:`user_leaf_axes`; step counter and opt state fully stacked)."""
+    from repro.core.engine import TrainState
+    return TrainState(params=user_leaf_axes(state.params), step=0,
+                      opt=jax.tree.map(lambda _: 0, state.opt))
+
+
+class AxesSpec:
+    """Hashable wrapper around an axes pytree, so a jitted function can
+    take it as a static argument (pytrees of dicts aren't hashable)."""
+
+    __slots__ = ("_leaves", "_treedef")
+
+    def __init__(self, axes_tree: PyTree):
+        leaves, treedef = jax.tree_util.tree_flatten(axes_tree)
+        self._leaves = tuple(leaves)
+        self._treedef = treedef
+
+    def unflatten(self) -> PyTree:
+        return jax.tree_util.tree_unflatten(self._treedef, self._leaves)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, AxesSpec)
+                and self._leaves == other._leaves
+                and self._treedef == other._treedef)
+
+    def __hash__(self) -> int:
+        return hash((self._leaves, self._treedef))
+
+
+# ---------------------------------------------------------------------------
+# slot-lane scatter/gather
+
+
+def stack_users(trees: Sequence[PyTree]) -> PyTree:
+    """Stack per-user pytrees on a new leading user axis. Quantized
+    leaves keep the first tree's int8 base (all users share it by
+    construction) and stack only the f32 deltas."""
+    def st(*leaves):
+        first = leaves[0]
+        if is_quantized(first):
+            if first.delta is None:
+                return first
+            return dataclasses.replace(
+                first, delta=jnp.stack([l.delta for l in leaves]))
+        return jnp.stack([jnp.asarray(l) for l in leaves])
+    return jax.tree.map(st, *trees, is_leaf=is_quantized)
+
+
+@jax.jit
+def _install(stacked: PyTree, tree: PyTree, slot) -> PyTree:
+    def put(s, t):
+        if is_quantized(s):
+            if s.delta is None:
+                return s
+            return dataclasses.replace(
+                s, delta=s.delta.at[slot].set(t.delta))
+        return s.at[slot].set(jnp.asarray(t, s.dtype))
+    return jax.tree.map(put, stacked, tree, is_leaf=is_quantized)
+
+
+def install_user(stacked: PyTree, tree: PyTree, slot: int) -> PyTree:
+    """Scatter one user's (unstacked) pytree into slot lane ``slot``.
+    The slot index is traced, so admissions into different slots reuse
+    one compiled scatter."""
+    return _install(stacked, tree, jnp.asarray(slot, jnp.int32))
+
+
+def take_user(stacked: PyTree, slot: int) -> PyTree:
+    """Read one slot lane back out as an unstacked per-user pytree."""
+    def tk(s):
+        if is_quantized(s):
+            if s.delta is None:
+                return s
+            return dataclasses.replace(s, delta=s.delta[slot])
+        return s[slot]
+    return jax.tree.map(tk, stacked, is_leaf=is_quantized)

@@ -135,9 +135,18 @@ jax.tree_util.register_pytree_with_keys(
 
 def _direction_coeffs(kk: int, lr, direction_mask):
     """Per-direction update coefficients: ``-lr/K``, or with a straggler
-    mask ``-lr * m_k / max(sum(m), 1)`` — an unbiased mean over survivors."""
+    mask ``-lr * m_k / max(sum(m), 1)`` — an unbiased mean over survivors.
+
+    The unmasked branch multiplies by the f32 reciprocal instead of
+    dividing: ``lr`` may now arrive traced (the user-batched engine
+    threads per-user lr vectors through jit), and XLA rewrites division
+    by a *constant* K into multiply-by-reciprocal while the eager replay
+    paths (checkpoint manager, adapter store) would keep true division —
+    a last-ulp fork for non-power-of-two K. One explicit multiply keeps
+    live jit and eager replay on identical ops, hence bit-identical.
+    """
     if direction_mask is None:
-        return jnp.full((kk,), -lr / kk, jnp.float32)
+        return jnp.full((kk,), -lr * jnp.float32(1.0 / kk), jnp.float32)
     m = jnp.asarray(direction_mask, jnp.float32).reshape(kk)
     return -lr * m / jnp.maximum(m.sum(), 1.0)
 
@@ -172,7 +181,7 @@ def _decay(params, wd_coeff):
             # semantics as add_scaled_z) and pass through.
             if p.delta is None:
                 return p
-            wd = jnp.float32(wd_coeff)
+            wd = jnp.asarray(wd_coeff, jnp.float32)
             return dataclasses.replace(
                 p, delta=p.delta * (1.0 - wd) - wd * p.base_f32())
         return ((p * (1.0 - wd_coeff)).astype(p.dtype)
@@ -189,9 +198,15 @@ def _decay(params, wd_coeff):
 class DirectionEvaluator:
     """How ``theta ± eps*z`` is realized for the 2K loss evaluations.
 
-    eval_fn: (loss_fn, params, batch, seed, cfg) -> (params, gs, ls).
-    ``params`` is threaded through because the in-place walk mutates (and
-    restores) it; pristine evaluators return it untouched.
+    eval_fn: (loss_fn, params, batch, seed, cfg, eps=None)
+    -> (params, gs, ls). ``params`` is threaded through because the
+    in-place walk mutates (and restores) it; pristine evaluators return
+    it untouched. ``eps`` optionally overrides ``cfg.eps`` with a traced
+    f32 scalar — the jitted steps always pass it so the projected
+    gradient ``(l+ - l-) / (2 eps)`` is a true division for constant and
+    traced eps alike (XLA rewrites division by a *baked* constant into
+    multiply-by-reciprocal, which would fork the last ulp between the
+    sequential and user-batched paths).
 
     pristine: the base point is never written during evaluation, so the
     (seed, gs) replay log reconstructs the step bit-exactly.
@@ -203,10 +218,16 @@ class DirectionEvaluator:
     donate: bool
 
 
+def _f32(value, default: float):
+    """Traced-or-config f32 scalar (``None`` -> the config constant)."""
+    return jnp.float32(default) if value is None \
+        else jnp.asarray(value, jnp.float32)
+
+
 def _eval_walk(loss_fn: LossFn, params: PyTree, batch: Any, seed,
-               cfg: MezoConfig):
+               cfg: MezoConfig, eps=None):
     """Sequential in-place walk: peak memory = params + one forward."""
-    eps = jnp.float32(cfg.eps)
+    eps = _f32(eps, cfg.eps)
 
     def one_dir(p, k):
         s = zrng.fold_seed(seed, k)
@@ -225,11 +246,11 @@ def _eval_walk(loss_fn: LossFn, params: PyTree, batch: Any, seed,
 
 
 def _eval_vmapdir(loss_fn: LossFn, params: PyTree, batch: Any, seed,
-                  cfg: MezoConfig):
+                  cfg: MezoConfig, eps=None):
     """Direction-parallel evaluation: the K-way vmap axis is what the
     launcher shards over the ``pod`` mesh axis; the only cross-pod
     exchange is the (K,) vector ``gs``."""
-    eps = jnp.float32(cfg.eps)
+    eps = _f32(eps, cfg.eps)
 
     def eval_dir(k):
         s = zrng.fold_seed(seed, k)
@@ -243,12 +264,12 @@ def _eval_vmapdir(loss_fn: LossFn, params: PyTree, batch: Any, seed,
 
 
 def _eval_fused(loss_fn: LossFn, params: PyTree, batch: Any, seed,
-                cfg: MezoConfig):
+                cfg: MezoConfig, eps=None):
     """Fused perturbed forward: 0 param sweeps per direction. ``loss_fn``
     must accept a ``perturb=`` keyword; both sides of each direction see
     the exact z-fields ``add_scaled_z`` would apply, so losses match
     ``vmapdir`` bit-for-bit on the jnp path in f32."""
-    eps = jnp.float32(cfg.eps)
+    eps = _f32(eps, cfg.eps)
 
     def one_dir(_, k):
         s = zrng.fold_seed(seed, k)
@@ -273,10 +294,12 @@ class UpdateRule:
     """How (seed, gs) becomes a parameter update.
 
     init_fn:   cfg -> opt state pytree (shapes only depend on cfg).
-    update_fn: (params, opt, seed, gs, direction_mask, cfg)
+    update_fn: (params, opt, seed, gs, direction_mask, cfg, lr=None)
                -> (params, opt). Consumes only scalars beyond params —
                this same function is the checkpoint manager's replay
-               primitive (zero forward passes on recovery).
+               primitive (zero forward passes on recovery). ``lr``
+               optionally overrides ``cfg.lr`` with a traced f32 scalar
+               (the user-batched engine threads per-user lr vectors).
     """
     name: str
     init_fn: Callable[[MezoConfig], PyTree]
@@ -287,10 +310,11 @@ def _sgd_init(cfg: MezoConfig) -> PyTree:
     return {}
 
 
-def _sgd_update(params, opt, seed, gs, direction_mask, cfg: MezoConfig):
+def _sgd_update(params, opt, seed, gs, direction_mask, cfg: MezoConfig,
+                lr=None):
     seed = jnp.asarray(seed, jnp.uint32)
     gs = jnp.asarray(gs, jnp.float32).reshape(-1)
-    lr = jnp.float32(cfg.lr)
+    lr = _f32(lr, cfg.lr)
     coeffs = _direction_coeffs(gs.shape[0], lr, direction_mask)
     if cfg.weight_decay:
         params = _decay(params, lr * cfg.weight_decay)
@@ -307,7 +331,7 @@ def momentum_history_init(cfg: MezoConfig) -> PyTree:
 
 
 def _momentum_update(params, opt, seed, gs, direction_mask,
-                     cfg: MezoConfig):
+                     cfg: MezoConfig, lr=None):
     """ZO momentum via truncated seed replay (paper Sec 6.2 asks for
     faster derivative-free methods).
 
@@ -320,7 +344,7 @@ def _momentum_update(params, opt, seed, gs, direction_mask,
     """
     seed = jnp.asarray(seed, jnp.uint32)
     gs = jnp.asarray(gs, jnp.float32).reshape(-1)
-    lr = jnp.float32(cfg.lr)
+    lr = _f32(lr, cfg.lr)
     kk = gs.shape[0]
     beta = jnp.float32(cfg.momentum)
     coeffs = _direction_coeffs(kk, lr, direction_mask)
@@ -360,43 +384,79 @@ def _momentum_update(params, opt, seed, gs, direction_mask,
 
 
 def _step_body(strategy: "ZOStrategy", loss_fn: LossFn, state: TrainState,
-               batch: Any, seed, cfg: MezoConfig, direction_mask):
+               batch: Any, seed, cfg: MezoConfig, direction_mask,
+               eps=None, lr=None):
     seed = jnp.asarray(seed, jnp.uint32)
     params, gs, ls = strategy.estimator.eval_fn(
-        loss_fn, state.params, batch, seed, cfg)
+        loss_fn, state.params, batch, seed, cfg, eps=eps)
     params, opt = strategy.update.update_fn(
-        params, state.opt, seed, gs, direction_mask, cfg)
+        params, state.opt, seed, gs, direction_mask, cfg, lr=lr)
     aux = MezoAux(loss=ls.mean(), gs=gs, seed=seed,
                   grad_norm_est=jnp.abs(gs).mean())
     return TrainState(params=params, step=state.step + jnp.uint32(1),
                       opt=opt), aux
 
 
+# eps/lr ride into every jitted step as *traced* operands (not cfg
+# constants baked into the trace): a step's arithmetic is then identical
+# whether eps/lr come from the config, a replay record, or a per-user
+# vector sliced by vmap — which is what makes the user-batched step
+# bit-exact against the sequential one.
 @partial(jax.jit, static_argnames=("strategy", "loss_fn", "cfg"))
 def _jit_step(strategy, loss_fn, state, batch, seed, cfg,
-              direction_mask=None):
+              direction_mask=None, eps=None, lr=None):
     return _step_body(strategy, loss_fn, state, batch, seed, cfg,
-                      direction_mask)
+                      direction_mask, eps, lr)
 
 
 @partial(jax.jit, static_argnames=("strategy", "loss_fn", "cfg"),
          donate_argnums=(2,))
 def _jit_step_donate(strategy, loss_fn, state, batch, seed, cfg,
-                     direction_mask=None):
+                     direction_mask=None, eps=None, lr=None):
     return _step_body(strategy, loss_fn, state, batch, seed, cfg,
-                      direction_mask)
+                      direction_mask, eps, lr)
 
 
 @partial(jax.jit, static_argnames=("strategy", "loss_fn", "cfg"),
          donate_argnums=(2,))
-def _jit_chunk(strategy, loss_fn, state, batches, base_seed, cfg):
+def _jit_chunk(strategy, loss_fn, state, batches, base_seed, cfg,
+               eps=None, lr=None):
     base = jnp.asarray(base_seed, jnp.uint32)
 
     def body(st, batch):
         return _step_body(strategy, loss_fn, st, batch,
-                          zrng.fold_seed(base, st.step), cfg, None)
+                          zrng.fold_seed(base, st.step), cfg, None,
+                          eps, lr)
 
     return jax.lax.scan(body, state, batches)
+
+
+@partial(jax.jit, static_argnames=("strategy", "loss_fn", "cfg",
+                                   "state_axes"),
+         donate_argnums=(2,))
+def _jit_step_users(strategy, loss_fn, state, batch, seeds, cfg,
+                    active, eps, lr, state_axes):
+    """One dispatch advances every slot of a user-stacked TrainState.
+
+    ``state`` carries a leading user axis on every per-user leaf (params
+    deltas / f32 weights, the step counter, opt state) while quantized
+    leaves keep ONE resident int8 base (``q``/``scale`` unbatched —
+    ``state_axes`` maps them to ``None``). Each lane runs the exact
+    sequential ``_step_body`` with its own (seed, eps, lr), then inactive
+    lanes are masked back to their previous state (ragged admission /
+    early finishers), so an active lane's trajectory is bit-identical to
+    a lone sequential run and an inactive lane is bit-frozen.
+    """
+    from repro.core.batching import masked_merge
+
+    def lane(st, b, seed, e, l):
+        return _step_body(strategy, loss_fn, st, b, seed, cfg, None, e, l)
+
+    axes = state_axes.unflatten()
+    new_state, aux = jax.vmap(
+        lane, in_axes=(axes, 0, 0, 0, 0), out_axes=(axes, 0))(
+        state, batch, seeds, eps, lr)
+    return masked_merge(state, new_state, active, axis=0), aux
 
 
 @dataclasses.dataclass(frozen=True)
@@ -419,14 +479,16 @@ class ZOStrategy:
              ) -> Tuple[TrainState, MezoAux]:
         fn = _jit_step_donate if self.estimator.donate else _jit_step
         return fn(self, loss_fn, state, batch,
-                  jnp.asarray(seed, jnp.uint32), cfg, direction_mask)
+                  jnp.asarray(seed, jnp.uint32), cfg, direction_mask,
+                  jnp.float32(cfg.eps), jnp.float32(cfg.lr))
 
     def lower(self, loss_fn: LossFn, state: TrainState, batch: Any, seed,
               cfg: MezoConfig, direction_mask=None):
         """AOT-lower one step (HLO inspection / cost analysis)."""
         fn = _jit_step_donate if self.estimator.donate else _jit_step
         return fn.lower(self, loss_fn, state, batch,
-                        jnp.asarray(seed, jnp.uint32), cfg, direction_mask)
+                        jnp.asarray(seed, jnp.uint32), cfg, direction_mask,
+                        jnp.float32(cfg.eps), jnp.float32(cfg.lr))
 
     def run_chunk(self, loss_fn: LossFn, state: TrainState, batches: Any,
                   base_seed, cfg: MezoConfig
@@ -442,7 +504,41 @@ class ZOStrategy:
         leading N axis).
         """
         return _jit_chunk(self, loss_fn, state, batches,
-                          jnp.asarray(base_seed, jnp.uint32), cfg)
+                          jnp.asarray(base_seed, jnp.uint32), cfg,
+                          jnp.float32(cfg.eps), jnp.float32(cfg.lr))
+
+    def step_users(self, loss_fn: LossFn, state: TrainState, batch: Any,
+                   seeds, cfg: MezoConfig, active, eps=None, lr=None
+                   ) -> Tuple[TrainState, MezoAux]:
+        """Advance U users' slots in ONE dispatch (the multi-tenant step).
+
+        ``state`` is a user-stacked TrainState (``core.batching``): every
+        per-user leaf carries a leading U axis, quantized leaves share
+        the single resident int8 base. ``batch`` leaves are stacked on a
+        leading U axis; ``seeds`` / ``eps`` / ``lr`` are per-user
+        vectors; ``active`` is the (U,) slot-occupancy mask — inactive
+        lanes come back bit-identical (masked merge), active lanes
+        bit-identical to a lone sequential :meth:`step` with the same
+        (seed, eps, lr).
+
+        Requires a pristine estimator (``fused`` / ``vmapdir``): the
+        walk's in-place sweeps would accumulate roundoff per lane and
+        break the replay-log contract the engine's eviction/resume
+        machinery rests on.
+        """
+        if not self.estimator.pristine:
+            raise ValueError(
+                f"step_users requires a pristine direction estimator "
+                f"(got {self.estimator.name!r}): in-place walk roundoff "
+                f"would break per-user replay-log bit-parity")
+        from repro.core.batching import AxesSpec, user_state_axes
+        u = seeds.shape[0]
+        eps = jnp.broadcast_to(_f32(eps, cfg.eps), (u,))
+        lr = jnp.broadcast_to(_f32(lr, cfg.lr), (u,))
+        return _jit_step_users(
+            self, loss_fn, state, batch, jnp.asarray(seeds, jnp.uint32),
+            cfg, jnp.asarray(active, bool), eps, lr,
+            AxesSpec(user_state_axes(state)))
 
 
 # ---------------------------------------------------------------------------

@@ -55,8 +55,22 @@ class PerturbCtx:
 
     seed/coeff may be traced (they are scan/vmap-carried in the fused MeZO
     step); dist / use_kernel / prefix are trace-time static.
+
+    **User-axis mode**: a (U,) ``seed`` vector (``coeff`` scalar or (U,))
+    batches the ctx over a leading user axis -- B users' directions in
+    one forward. Input conventions then follow the multi-tenant state
+    layout (``core.batching``): activations and plain param leaves carry
+    a leading user axis; :class:`~repro.optim.quant.QuantizedLeaf`
+    weights keep the single resident int8 base (``q``/``scale`` shared)
+    with only the f32 ``delta`` stacked (or absent when frozen). Aligned
+    shared-base matmuls dispatch ONE ``kernels.ops.zo_matmul_users``
+    call per site -- per-user seeds/coeffs ride SMEM while the base
+    tiles are read once -- and every other primitive vmaps the scalar
+    path, so each lane is bit-identical to a scalar ctx with that
+    user's (seed, coeff).
     """
-    seed: Any                        # uint32 scalar step/direction seed
+    seed: Any                        # uint32 step/direction seed; (U,) =>
+    #                                  user-axis mode (see class docstring)
     coeff: Any                       # f32 scalar: +eps or -eps
     dist: str = "rademacher"
     use_kernel: bool = False         # route aligned 2-D matmuls via Pallas
@@ -87,6 +101,35 @@ class PerturbCtx:
     def _coeff(self):
         return jnp.asarray(self.coeff, jnp.float32)
 
+    # -- user axis ---------------------------------------------------------
+
+    @property
+    def batched(self) -> bool:
+        """True in user-axis mode ((U,) seed vector)."""
+        return jnp.ndim(self.seed) == 1
+
+    def _user_lanes(self):
+        """(U,) uint32 seeds and (U,) f32 coeffs (scalar coeff broadcast)."""
+        seeds = jnp.asarray(self.seed, jnp.uint32)
+        coeffs = jnp.broadcast_to(
+            jnp.asarray(self.coeff, jnp.float32), seeds.shape)
+        return seeds, coeffs
+
+    def _lane(self, seed, coeff) -> "PerturbCtx":
+        return dataclasses.replace(self, seed=seed, coeff=coeff)
+
+    @staticmethod
+    def _user_axes(leaf):
+        """vmap in_axes for a weight under the user-axis conventions:
+        plain leaves stacked on axis 0 unless shared 2-D; quantized
+        leaves share the base and stack only a present delta."""
+        from repro.optim.quant import QuantizedLeaf
+        if is_quantized(leaf):
+            return QuantizedLeaf(q=None, scale=None,
+                                 delta=None if leaf.delta is None else 0,
+                                 orig_dtype=leaf.orig_dtype)
+        return 0
+
     # -- perturbation primitives ------------------------------------------
 
     def perturb(self, name: str, leaf):
@@ -94,7 +137,15 @@ class PerturbCtx:
 
         Quantized leaves dequantize into the same transient:
         ``q*scale (+ delta) + coeff*z`` in one f32 expression, with the
-        z-field of the *leaf's* path (identical to the f32 base's)."""
+        z-field of the *leaf's* path (identical to the f32 base's).
+
+        User-axis mode: ``leaf`` is per-user stacked (quantized: shared
+        base, stacked delta); each lane gets its own z-field."""
+        if self.batched:
+            seeds, coeffs = self._user_lanes()
+            return jax.vmap(
+                lambda s, c, lf: self._lane(s, c).perturb(name, lf),
+                in_axes=(0, 0, self._user_axes(leaf)))(seeds, coeffs, leaf)
         path, base, off = self._leaf(name)
         if not is_perturbable(path) or \
                 not jnp.issubdtype(leaf.dtype, jnp.floating):
@@ -114,6 +165,8 @@ class PerturbCtx:
         cast back to the weight dtype like ``add_scaled_z`` so the f32 path
         is bit-exact with the sequential strategies).
         """
+        if self.batched:
+            return self._matmul_users(x, w, name)
         path, base, off = self._leaf(name)
         if not is_perturbable(path) or \
                 not jnp.issubdtype(w.dtype, jnp.floating):
@@ -137,10 +190,53 @@ class PerturbCtx:
             return y.reshape(*lead, n)
         return x @ self.perturb(name, w)
 
+    def _matmul_users(self, x, w, name: str):
+        """User-axis matmul: x (U, ..., K). A SHARED 2-D base (plain f32
+        or delta-less quantized) on the aligned kernel path dispatches
+        one :func:`repro.kernels.ops.zo_matmul_users` -- B users'
+        perturbed forwards reading the resident base once; stacked /
+        delta-carrying weights vmap the scalar lane (bit-identical to a
+        per-user loop either way)."""
+        path, base, off = self._leaf(name)   # base: (U,) lane vector
+        seeds, coeffs = self._user_lanes()
+        shared = (w.delta is None and w.q.ndim == 2) if is_quantized(w) \
+            else (w.ndim == 2)
+        floating = jnp.issubdtype(w.dtype, jnp.floating)
+        wshape = w.q.shape if is_quantized(w) else w.shape
+        if shared and floating and is_perturbable(path) and \
+                self.use_kernel and kernel_aligned(wshape):
+            from repro.kernels import ops as kops  # lazy: pallas import
+            u, lead, k = x.shape[0], x.shape[1:-1], x.shape[-1]
+            n = wshape[-1]
+            if is_quantized(w):
+                y = kops.zo_matmul_users(x.reshape(u, -1, k), w.q, base, 0,
+                                         coeffs, dist=self.dist,
+                                         prime_offset=off, prehashed=True,
+                                         scale=w.scale)
+            else:
+                y = kops.zo_matmul_users(x.reshape(u, -1, k), w, base, 0,
+                                         coeffs, dist=self.dist,
+                                         prime_offset=off, prehashed=True)
+            return y.reshape(u, *lead, n)
+        w_ax = None if (shared and not is_quantized(w)) \
+            else self._user_axes(w)
+        return jax.vmap(
+            lambda s, c, xu, wu: self._lane(s, c).matmul(xu, wu, name),
+            in_axes=(0, 0, 0, w_ax))(seeds, coeffs, x, w)
+
     def take(self, name: str, table, ids):
         """take(table + coeff*z, ids, axis=0), perturbing only gathered
         rows. A quantized table dequantizes only the gathered rows too
-        (quant.take_rows): still O(tokens*d), never O(vocab*d)."""
+        (quant.take_rows): still O(tokens*d), never O(vocab*d).
+
+        User-axis mode: ``ids`` carry a leading user axis; the table
+        follows the weight conventions (stacked plain / shared base)."""
+        if self.batched:
+            seeds, coeffs = self._user_lanes()
+            return jax.vmap(
+                lambda s, c, tb, i: self._lane(s, c).take(name, tb, i),
+                in_axes=(0, 0, self._user_axes(table), 0))(
+                seeds, coeffs, table, ids)
         path, base, off = self._leaf(name)
         if not is_perturbable(path) or \
                 not jnp.issubdtype(table.dtype, jnp.floating):

@@ -32,3 +32,24 @@ def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
     return _k.zo_matmul(x, w, seed, salt, coeff, dist=dist, blocks=blocks,
                         interpret=_INTERPRET, prime_offset=prime_offset,
                         prehashed=prehashed, scale=scale)
+
+
+def zo_add_users(w, seeds, salt: int, coeffs, dist: str = "rademacher",
+                 block=(256, 256), prime_offset: int = 0,
+                 prehashed: bool = False):
+    """Per-user stacked leaves: ``out[u] = w[u] + coeffs[u]*z(seeds[u])``."""
+    return _k.zo_add_users(w, seeds, salt, coeffs, dist=dist, block=block,
+                           interpret=_INTERPRET, prime_offset=prime_offset,
+                           prehashed=prehashed)
+
+
+def zo_matmul_users(x, w, seeds, salt: int, coeffs,
+                    dist: str = "rademacher", blocks=(128, 128, 128),
+                    prime_offset: int = 0, prehashed: bool = False,
+                    scale=None):
+    """B users' perturbed forwards against ONE resident (K, N) base:
+    ``y[u] = x[u] @ (w + coeffs[u]*z(seeds[u]))`` in one dispatch."""
+    return _k.zo_matmul_users(x, w, seeds, salt, coeffs, dist=dist,
+                              blocks=blocks, interpret=_INTERPRET,
+                              prime_offset=prime_offset,
+                              prehashed=prehashed, scale=scale)

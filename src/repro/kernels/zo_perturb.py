@@ -159,6 +159,55 @@ def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
 
 
 # ---------------------------------------------------------------------------
+# user-batched W[u] + coeff[u] * z(seed[u])
+
+
+def _zo_add_users_kernel(seed_ref, coeff_ref, w_ref, o_ref, *, salt, bm, bn,
+                         dist, prime_offset, prehashed):
+    u, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    z = _tile_z(seed_ref[u], salt, (bm, bn), i * bm, j * bn, dist,
+                prime_offset, prehashed)
+    w = w_ref[0].astype(jnp.float32)
+    o_ref[0] = (w + coeff_ref[u] * z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("salt", "dist", "block", "interpret",
+                                    "prime_offset", "prehashed"))
+def zo_add_users(w, seeds, salt: int, coeffs, dist: str = "rademacher",
+                 block=(256, 256), interpret: bool = False,
+                 prime_offset: int = 0, prehashed: bool = False):
+    """User-batched :func:`zo_add`: W (U, M, N) per-user stacked leaves,
+    seeds/coeffs (U,) -- ``out[u] = W[u] + coeffs[u] * z(seeds[u])``.
+
+    One dispatch sweeps every user's leaf; per-tile arithmetic (block
+    shapes, z regeneration, accumulation) is identical to U scalar
+    :func:`zo_add` calls, so the batch is bit-exact with the loop. The
+    user axis rides the grid's *leading* (outermost, slowest) dimension:
+    lane-local tile order is preserved and the (U,) seed/coeff vectors
+    sit in SMEM, indexed by ``program_id(0)``.
+    """
+    u, m, n = w.shape
+    bm, bn = _pick(m, block[0]), _pick(n, block[1])
+    seeds = jnp.asarray(seeds, _U32).reshape(u)
+    coeffs = jnp.asarray(coeffs, jnp.float32).reshape(u)
+    return pl.pallas_call(
+        functools.partial(_zo_add_users_kernel, salt=salt, bm=bm, bn=bn,
+                          dist=dist, prime_offset=prime_offset,
+                          prehashed=prehashed),
+        grid=(u, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seeds (U,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # coeffs (U,)
+            pl.BlockSpec((1, bm, bn), lambda uu, i, j: (uu, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda uu, i, j: (uu, i, j)),
+        out_shape=jax.ShapeDtypeStruct((u, m, n), w.dtype),
+        interpret=interpret,
+    )(seeds, coeffs, w)
+
+
+# ---------------------------------------------------------------------------
 # X @ (W + coeff * z)
 
 
@@ -273,3 +322,121 @@ def zo_matmul(x, w, seed, salt: int, coeff, dist: str = "rademacher",
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(seed, coeff, x, w, scale)
+
+
+# ---------------------------------------------------------------------------
+# user-batched X[u] @ (W + coeff[u] * z(seed[u])) -- one resident base,
+# B users' perturbed forwards in one dispatch
+
+
+def _zo_matmul_users_kernel(seed_ref, coeff_ref, x_ref, w_ref, o_ref,
+                            acc_ref, *, salt, bk, bn, n_k, dist,
+                            prime_offset, prehashed):
+    u, j, k = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = _tile_z(seed_ref[u], salt, (bk, bn), k * bk, j * bn, dist,
+                prime_offset, prehashed)
+    w = w_ref[...].astype(jnp.float32) + coeff_ref[u] * z
+    acc_ref[...] += jnp.dot(x_ref[0].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _zo_matmul_users_q_kernel(seed_ref, coeff_ref, x_ref, w_ref, s_ref,
+                              o_ref, acc_ref, *, salt, bk, bn, n_k, dist,
+                              prime_offset, prehashed):
+    """Quantized shared base: the int8 W tile is read once per (j, k)
+    revisit and dequantized in VMEM with each user's perturbation --
+    U tenants' forwards never materialize a f32 base in HBM."""
+    u, j, k = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = _tile_z(seed_ref[u], salt, (bk, bn), k * bk, j * bn, dist,
+                prime_offset, prehashed)
+    w = w_ref[...].astype(jnp.float32) * s_ref[...] + coeff_ref[u] * z
+    acc_ref[...] += jnp.dot(x_ref[0].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("salt", "dist", "blocks", "interpret",
+                                    "prime_offset", "prehashed"))
+def zo_matmul_users(x, w, seeds, salt: int, coeffs,
+                    dist: str = "rademacher", blocks=(128, 128, 128),
+                    interpret: bool = False, prime_offset: int = 0,
+                    prehashed: bool = False, scale=None):
+    """User-batched :func:`zo_matmul`: ``Y[u] = X[u] @ (W +
+    coeffs[u] * z(seeds[u]))``. X: (U, M, K); W: (K, N), SHARED across
+    users (the single resident base); seeds/coeffs: (U,).
+
+    This is the multi-tenant hot path: one dispatch evaluates B users'
+    perturbed forwards against one copy of the weights. The user axis is
+    the grid's outermost dimension with the k-reduction innermost, and
+    block sizes match the scalar kernel's, so each lane's accumulation
+    order -- and therefore its bits -- is identical to a lone
+    :func:`zo_matmul` call with that user's (seed, coeff).
+
+    scale: per-output-channel (N,) f32 scales marking ``w`` as an int8
+    quantized base; dequant fuses into the same VMEM tile pass, so U
+    tenants share ~1 byte/param of resident weight HBM.
+    """
+    u, m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bk, bn = _pick(m, blocks[0]), _pick(k, blocks[1]), _pick(n, blocks[2])
+    grid = (u, m // bm, n // bn, k // bk)
+    seeds = jnp.asarray(seeds, _U32).reshape(u)
+    coeffs = jnp.asarray(coeffs, jnp.float32).reshape(u)
+    if scale is None:
+        kern = functools.partial(_zo_matmul_users_kernel, salt=salt, bk=bk,
+                                 bn=bn, n_k=grid[3], dist=dist,
+                                 prime_offset=prime_offset,
+                                 prehashed=prehashed)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),  # seeds (U,)
+                pl.BlockSpec(memory_space=pltpu.SMEM),  # coeffs (U,)
+                pl.BlockSpec((1, bm, bk), lambda uu, i, j, kk: (uu, i, kk)),
+                pl.BlockSpec((bk, bn), lambda uu, i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn),
+                                   lambda uu, i, j, kk: (uu, i, j)),
+            out_shape=jax.ShapeDtypeStruct((u, m, n), x.dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(seeds, coeffs, x, w)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, n)
+    kern = functools.partial(_zo_matmul_users_q_kernel, salt=salt, bk=bk,
+                             bn=bn, n_k=grid[3], dist=dist,
+                             prime_offset=prime_offset, prehashed=prehashed)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bm, bk), lambda uu, i, j, kk: (uu, i, kk)),
+            pl.BlockSpec((bk, bn), lambda uu, i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda uu, i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda uu, i, j, kk: (uu, i, j)),
+        out_shape=jax.ShapeDtypeStruct((u, m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(seeds, coeffs, x, w, scale)

@@ -189,3 +189,43 @@ class Trainer:
                          f"({dt:.1f}s)")
         self._sync_losses()
         return state.params
+
+
+def train_multi_tenant(model_cfg: ModelConfig, jobs, *, n_slots: int = 4,
+                       estimator: str = "fused", update: str = "sgd",
+                       seed: int = 0, mezo_cfg: Optional[MezoConfig] = None,
+                       quant: str = "none", store=None,
+                       log_dir: Optional[str] = None,
+                       log_fn: Callable[[str], None] = print):
+    """One-call multi-tenant path: run ``jobs`` (TrainJob sequence)
+    through a batched :class:`repro.train.TrainEngine` over one shared
+    base -- each job's trajectory bit-identical to a lone
+    :class:`Trainer` with ``seed=derive_user_seed(seed, job.user)``.
+
+    ``quant="int8"`` quantizes the freshly initialized base before the
+    store adopts it (ignored when an explicit ``store`` brings its own
+    base). Returns ``(engine, results)``: the engine for its stats and
+    store, results jid-sorted.
+    """
+    from repro.serve.adapters import AdapterStore
+    from repro.train import TrainEngine
+
+    check_quant_mode(quant)
+    if store is None:
+        params = build_model(model_cfg).init(jax.random.PRNGKey(seed))
+        if quant != "none":
+            params = quantize_tree(params, quant, with_delta=True)
+        store = AdapterStore(params, mezo_cfg=mezo_cfg or MezoConfig(),
+                             update_rule=build_strategy(
+                                 estimator, update).update)
+    engine = TrainEngine(model_cfg, store, n_slots=n_slots,
+                         estimator=estimator, update=update, seed=seed,
+                         mezo_cfg=mezo_cfg, log_dir=log_dir)
+    for job in jobs:
+        engine.submit(job)
+    results = engine.run()
+    s = engine.stats
+    log_fn(f"[fleet] {s.finished} jobs, {s.user_steps} user-steps in "
+           f"{s.dispatches} dispatches ({s.user_steps_per_s:.2f} "
+           f"user-steps/s)")
+    return engine, results

@@ -141,6 +141,15 @@ class AdapterStore:
     def users(self) -> List[str]:
         return sorted(set(self._adapters) | set(self._deltas))
 
+    def records(self, user: Optional[str]) -> Tuple[dict, ...]:
+        """The user's stored replay records, step-ordered (empty for the
+        base id and for users never ``put`` -- a fresh user resumes from
+        nothing). This is the TrainEngine's resume source."""
+        if user is None or user == BASE_USER:
+            return ()
+        ad = self._adapters.get(user)
+        return ad.records if ad is not None else ()
+
     # ---- materialization -------------------------------------------------
     def materialize(self, user: Optional[str]) -> PyTree:
         """``base + replay(user)`` (or base + int8 delta), LRU-cached."""
@@ -166,11 +175,13 @@ class AdapterStore:
         self._evict()
         return params
 
-    def _replay(self, records) -> PyTree:
-        """Replay the whole log through the update rule from a fresh
-        state -- identical arithmetic to the live steps (sgd: the classic
+    def _replay_records(self, records) -> Tuple[PyTree, PyTree]:
+        """Replay a log through the update rule from a fresh state --
+        identical arithmetic to the live steps (sgd: the classic
         seed-replay sweep; momentum: the history window rolls forward
-        from empty exactly as training rolled it).
+        from empty exactly as training rolled it). Returns the full
+        ``(params, opt)`` pair so a trainer can resume mid-log with the
+        rule's state intact, not just serve the weights.
 
         A quantized base (optim/quant.py) works unchanged: the replay
         writes each quantized leaf's f32 delta while the int8 values
@@ -187,7 +198,27 @@ class AdapterStore:
                 params, opt, np.uint32(rec["seed"]),
                 np.asarray(rec["gs"], np.float32),
                 None if mask is None else np.asarray(mask, np.float32), c)
-        return params
+        return params, opt
+
+    def _replay(self, records) -> PyTree:
+        return self._replay_records(records)[0]
+
+    def materialize_state(self, user: Optional[str]
+                          ) -> Tuple[PyTree, PyTree, int]:
+        """Resume point for a fine-tune job: ``(params, opt,
+        n_replayed)`` after replaying the user's stored records from the
+        base. ``None`` / ``BASE_USER`` / a never-seen user start fresh
+        (zero records); a user known only by a compact int8 delta raises
+        -- deltas are lossy, so resuming training from one would fork
+        the trajectory from its own replay log."""
+        if (user is not None and user != BASE_USER
+                and user in self._deltas and user not in self._adapters):
+            raise ValueError(
+                f"adapter {user!r} exists only as a lossy int8 delta; "
+                f"training resume needs the exact replay log")
+        recs = self.records(user)
+        params, opt = self._replay_records(recs)
+        return params, opt, len(recs)
 
     def cached_bytes(self) -> int:
         """Bytes the cache actually adds on top of the shared base.

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batching import masked_merge
 from repro.models import build_model
 from repro.serve import sampling
 from repro.serve.adapters import AdapterStore
@@ -124,12 +125,9 @@ class ServeEngine:
         @partial(jax.jit, donate_argnums=(1,))
         def decode_masked(params, cache, toks, pos, mask):
             logits, new = decode_step(params, cache, toks, pos)
-
-            def merge(c, n):       # every StateCache leaf: batch on axis 1
-                m = jnp.reshape(mask, (1, -1) + (1,) * (c.ndim - 2))
-                return jnp.where(m, n, c)
-
-            return logits, jax.tree.map(merge, cache, new)
+            # every StateCache leaf batches on axis 1 (same ragged-slot
+            # helper the TrainEngine uses on its axis-0 user stack)
+            return logits, masked_merge(cache, new, mask, axis=1)
 
         @partial(jax.jit, donate_argnums=(0,))
         def install(cache, prefill_cache, slot):

@@ -1,0 +1,4 @@
+"""Multi-tenant ZO training (the trainer-side twin of repro.serve)."""
+
+from repro.train.engine import (JobResult, TrainEngine,  # noqa: F401
+                                TrainJob, derive_user_seed)

@@ -1,0 +1,87 @@
+"""Capture TrainEngine goldens (tests/golden/train_engine.json).
+
+One fixed multi-tenant scenario per pinned family: U users through a
+batched TrainEngine (fused estimator, sgd rule, K=2 directions), f32 and
+int8-base arms. Pins per-user losses and gs projections so any drift in
+the user-batched step -- vmap lane arithmetic, masked merge, seed
+derivation, store replay -- names the family and user it broke.
+
+Run from the repo root to (re)capture:
+
+  PYTHONPATH=src python tests/golden/capture_train_engine.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import rng as zrng
+from repro.core.mezo import MezoConfig
+from repro.models import build_model
+from repro.optim.quant import quantize_tree
+from repro.serve.adapters import AdapterStore
+from repro.train import TrainEngine, TrainJob
+
+ARCHS = {"gemma-2b": "dense", "rwkv6-7b": "ssm"}
+U, T, B, S = 4, 3, 2, 8
+MZ = MezoConfig(eps=1e-3, lr=1e-4, n_directions=2)
+ENGINE_SEED = 7
+
+
+def make_batches(cfg, user: str, n_steps: int):
+    """Deterministic per-(user, step) LM batches (numpy: platform-stable)."""
+    salt = zrng.leaf_salt(user)
+    out = []
+    for step in range(n_steps):
+        rng = np.random.default_rng((salt, step))
+        toks = rng.integers(0, cfg.vocab, (B, S + 1), dtype=np.int32)
+        out.append({"tokens": toks[:, :-1], "targets": toks[:, 1:],
+                    "loss_mask": np.ones((B, S), np.float32)})
+    return out
+
+
+def run_engine(arch: str, quant: str):
+    """The pinned scenario: U jobs, one engine, full run."""
+    cfg = get_config(arch).reduced()
+    base = build_model(cfg).init(jax.random.PRNGKey(0))
+    if quant == "int8":
+        base = quantize_tree(base, with_delta=True)
+    store = AdapterStore(jax.tree.map(
+        lambda x: x, base), mezo_cfg=MZ)
+    eng = TrainEngine(cfg, store, n_slots=U, seed=ENGINE_SEED)
+    for i in range(U):
+        u = f"u{i}"
+        eng.submit(TrainJob(user=u, batches=make_batches(cfg, u, T),
+                            n_steps=T))
+    return eng.run(), store
+
+
+def capture(arch: str) -> dict:
+    rec = {"family": ARCHS[arch], "arms": {}}
+    arms = ("f32", "int8") if ARCHS[arch] == "dense" else ("f32",)
+    for arm in arms:
+        results, _ = run_engine(arch, "int8" if arm == "int8" else "none")
+        rec["arms"][arm] = {
+            "losses": {r.user: r.losses for r in results},
+            "gs": {r.user: [row["gs"] for row in r.records]
+                   for r in results},
+        }
+    return rec
+
+
+def main():
+    out = {arch: capture(arch) for arch in ARCHS}
+    path = os.path.join(os.path.dirname(__file__), "train_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -66,3 +66,75 @@ def test_zero_coeff_is_identity_matmul():
     got = ops.zo_matmul(x, w, 0, 0, 0.0)
     np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---- user-batched variants (multi-tenant TrainEngine hot path) ------------
+
+U_SEEDS = jnp.asarray([42, 7, 1000, 3], jnp.uint32)
+U_COEFFS = jnp.asarray([0.125, -0.5, 0.01, 0.0], jnp.float32)
+
+
+@pytest.mark.parametrize("dist", ["rademacher", "gaussian"])
+def test_zo_matmul_users_bit_equals_scalar_loop(dist):
+    """One user-batched dispatch == U lone zo_matmul calls, bit-exact
+    (same block shapes => same per-lane accumulation order)."""
+    u, m, k, n = len(U_SEEDS), 64, 128, 128
+    x = jax.random.normal(KEY, (u, m, k), jnp.float32) * 0.1
+    w = jax.random.normal(jax.random.fold_in(KEY, 4), (k, n),
+                          jnp.float32) * 0.1
+    got = ops.zo_matmul_users(x, w, U_SEEDS, 123, U_COEFFS, dist=dist)
+    assert got.shape == (u, m, n)
+    for i in range(u):
+        want = ops.zo_matmul(x[i], w, U_SEEDS[i], 123, U_COEFFS[i],
+                             dist=dist)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want),
+                                      err_msg=f"user lane {i}")
+
+
+def test_zo_matmul_users_int8_scale_equals_scalar_loop():
+    """The quantized variant (shared int8 base + per-channel scales).
+
+    The dequant expression ``w*scale + coeff*z`` has two multiplies, and
+    XLA may contract the mul+add pair differently across the two
+    (otherwise textually identical) kernels, so this path is pinned to
+    one-ulp agreement rather than atol=0; the single-multiply f32 path
+    above stays bit-exact.
+    """
+    u, m, k, n = len(U_SEEDS), 32, 128, 128
+    x = jax.random.normal(KEY, (u, m, k), jnp.float32) * 0.1
+    q = jax.random.randint(jax.random.fold_in(KEY, 5), (k, n), -127, 128,
+                           jnp.int8)
+    scale = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 6), (n,),
+                                      jnp.float32)) * 0.01 + 1e-4
+    got = ops.zo_matmul_users(x, q, U_SEEDS, 9, U_COEFFS, scale=scale)
+    for i in range(u):
+        want = ops.zo_matmul(x[i], q, U_SEEDS[i], 9, U_COEFFS[i],
+                             scale=scale)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=f"user lane {i}")
+
+
+@pytest.mark.parametrize("dist", ["rademacher", "gaussian"])
+def test_zo_add_users_bit_equals_scalar_loop(dist):
+    u, m, n = len(U_SEEDS), 128, 256
+    w = jax.random.normal(jax.random.fold_in(KEY, 7), (u, m, n), jnp.float32)
+    got = ops.zo_add_users(w, U_SEEDS, 77, U_COEFFS, dist=dist)
+    for i in range(u):
+        want = ops.zo_add(w[i], U_SEEDS[i], 77, U_COEFFS[i], dist=dist)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want),
+                                      err_msg=f"user lane {i}")
+
+
+def test_zo_matmul_users_prehashed_matches_raw():
+    """The ctx hot path passes prehashed per-(user, leaf) bases; they
+    must draw the same streams as the raw (seed, salt) form."""
+    from repro.core import rng as zrng
+    u, m, k, n = len(U_SEEDS), 32, 128, 128
+    x = jax.random.normal(KEY, (u, m, k), jnp.float32) * 0.1
+    w = jax.random.normal(jax.random.fold_in(KEY, 8), (k, n),
+                          jnp.float32) * 0.1
+    raw = ops.zo_matmul_users(x, w, U_SEEDS, 55, U_COEFFS)
+    base = zrng.leaf_base(U_SEEDS, 55)
+    pre = ops.zo_matmul_users(x, w, base, 0, U_COEFFS, prehashed=True)
+    np.testing.assert_array_equal(np.asarray(raw), np.asarray(pre))
