@@ -84,6 +84,27 @@ def check_table3(bench_dir: str):
     ok = cold is not None and hit is not None and hit < cold / 100
     _check("table3/adapter_cache", ok,
            f"cache hit {hit}s vs cold replay {cold}s (need > 100x)")
+    # PR 7 headline: decode must stay >= 2x the pre-paging baseline
+    # (99.96 tok/s committed with PR 6, same slots/model/gen shape),
+    # with the paged engine bit-identical to unpaged and holding >= 2x
+    # the resident slots at the same KV HBM budget.
+    PRE_PAGING_DECODE_TPS = 99.96
+    lg = t.get("decode_long", {})
+    tps = lg.get("paged_tok_per_s", 0)
+    _check("table3/decode_paged_tps",
+           tps >= 2 * PRE_PAGING_DECODE_TPS,
+           f"paged decode {tps:.0f} tok/s vs {PRE_PAGING_DECODE_TPS} "
+           f"pre-paging baseline (need >= 2x)")
+    _check("table3/decode_paged_parity",
+           lg.get("paged_greedy_parity") is True,
+           f"paged greedy tokens == unpaged: "
+           f"{lg.get('paged_greedy_parity')}")
+    rs = t.get("resident_slots", {})
+    ratio = rs.get("slots_ratio", 0)
+    _check("table3/resident_slots", ratio >= 2.0,
+           f"{rs.get('paged_peak_active_slots')} paged slots vs "
+           f"{rs.get('dense_slots')} dense at {rs.get('kv_budget_pages')} "
+           f"KV pages = {ratio}x (need >= 2x)")
 
 
 def check_table4(bench_dir: str):

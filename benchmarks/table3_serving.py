@@ -100,7 +100,7 @@ def run(out_dir="experiments/bench"):
         eng.run()
         return eng.stats
 
-    decode_run(["u0"])                     # compile
+    decode_run(["u0"]), decode_run(["u0", "u1"])   # compile both paths
     st1 = decode_run(["u0"])               # one adapter: one dispatch/step
     st2 = decode_run(["u0", "u1"])         # two adapters: masked merge
     rows.append(("table3/decode_1adapter", st1.decode_s / max(
@@ -112,6 +112,65 @@ def run(out_dir="experiments/bench"):
                        "one_adapter_tok_per_s": st1.decode_tps,
                        "two_adapter_tok_per_s": st2.decode_tps,
                        "engine_prefill_tok_per_s": st1.prefill_tps}
+
+    # ---- long-generation decode: dense vs paged KV ----------------------
+    # gen >> prompt is where decode dominates and where the paged read
+    # (live pages only) beats the dense full-max_len cache scan. Tokens
+    # must match bit-for-bit: paging relayouts the cache, not the math.
+    LG = 256
+    PS = 16
+
+    def long_run(paged):
+        eng = ServeEngine(cfg, store, n_slots=B, max_len=P + LG, seed=0,
+                          paged=paged, page_size=PS)
+        rids = [eng.submit(Request(prompt=prompts[i], max_new=LG,
+                                   user="u0")) for i in range(B)]
+        outs = {c.rid: c.tokens.tolist() for c in eng.run()}
+        return eng.stats, [outs[r] for r in rids]
+
+    long_run(False), long_run(True)        # compile both layouts
+    st_d, toks_d = long_run(False)
+    st_p, toks_p = long_run(True)
+    parity = toks_d == toks_p
+    rows.append(("table3/decode_long_dense", st_d.decode_s / max(
+        st_d.decode_steps, 1) * 1e6, f"{st_d.decode_tps:.0f} tok/s "
+        f"(gen={LG}, dense KV)"))
+    rows.append(("table3/decode_long_paged", st_p.decode_s / max(
+        st_p.decode_steps, 1) * 1e6, f"{st_p.decode_tps:.0f} tok/s "
+        f"(gen={LG}, page_size={PS}, parity={parity})"))
+    table["decode_long"] = {
+        "slots": B, "prompt_len": P, "gen": LG, "page_size": PS,
+        "dense_tok_per_s": st_d.decode_tps,
+        "paged_tok_per_s": st_p.decode_tps,
+        "paged_greedy_parity": parity,
+        "paged_peak_pages": st_p.peak_pages_in_use}
+
+    # ---- resident slots at a fixed KV HBM budget ------------------------
+    # budget = the dense engine's 4 slots x max_len KV. The paged pool
+    # holds the same page count but shares it: short requests occupy
+    # only their live pages, so far more of them are resident at once.
+    slot_pages = -(-(P + LG) // PS)
+    pool = B * slot_pages + 1              # == dense KV bytes (+ trash)
+    many = 4 * B
+    short_p, short_g = 16, 16              # 32 tokens -> 2 pages each
+    eng = ServeEngine(cfg, store, n_slots=many, max_len=P + LG, seed=0,
+                      paged=True, page_size=PS, pool_pages=pool)
+    sp = np.random.default_rng(2).integers(0, cfg.vocab, (many, short_p),
+                                           dtype=np.int32)
+    for i in range(many):
+        eng.submit(Request(prompt=sp[i], max_new=short_g, user="u0"))
+    eng.run()
+    ratio = eng.stats.peak_active_slots / B
+    rows.append(("table3/resident_slots_fixed_hbm",
+                 eng.stats.peak_active_slots,
+                 f"{eng.stats.peak_active_slots} slots vs {B} dense "
+                 f"({ratio:.1f}x) at {pool - 1} pages"))
+    table["resident_slots"] = {
+        "kv_budget_pages": pool - 1, "dense_slots": B,
+        "paged_peak_active_slots": eng.stats.peak_active_slots,
+        "slots_ratio": ratio,
+        "request_tokens": short_p + short_g,
+        "paged_peak_pages": eng.stats.peak_pages_in_use}
 
     with open(os.path.join(out_dir, "table3_serving.json"), "w") as f:
         json.dump(table, f, indent=1)

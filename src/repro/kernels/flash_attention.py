@@ -72,7 +72,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 def flash_attention(q, k, v, *, causal: bool = True, blocks=(128, 128),
                     interpret: bool = False):
     """q: (B, S, H, hd); k/v: (B, T, KV, hd) -> (B, S, H, hd)."""
+    from repro.kernels.flash_decode import check_head_dim
     b, s, h, hd = q.shape
+    check_head_dim(hd, interpret=interpret, kernel="flash_attention")
     t, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     qg = q.reshape(b, s, kvh, g, hd)

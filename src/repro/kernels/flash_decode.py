@@ -1,0 +1,159 @@
+"""Flash-decoding over a paged KV cache (Pallas TPU + jnp reference).
+
+Decode is single-token attention: one query row per sequence against
+everything that sequence has cached. The dense path reads the full
+(B, S_max) cache every step -- including the dead tail beyond each
+slot's position -- and its HBM traffic is what caps decode tok/s
+(table3). This kernel reads K/V as fixed-size *pages* gathered through a
+per-slot page table, splits the key axis across a grid dimension, and
+reduces with online-softmax partials (acc, m, l) in VMEM scratch:
+
+  * pages whose first position lies beyond the slot's ``pos`` are dead
+    for the whole tile -- the ``pl.when`` guard skips their dot entirely
+    (flash-decoding's "only read what is resident"),
+  * the page gather is a BlockSpec index map over a scalar-prefetched
+    page table (``pltpu.PrefetchScalarGridSpec``): the DMA engine fetches
+    pool page ``pages[b, p]`` directly, no materialized (B, S, ...)
+    contiguous copy of the cache ever exists.
+
+Layout: q (B, H, hd) -- one token per slot; k/v pools
+(n_pages, page_size, KV, hd); pages (B, n_live) physical page ids;
+pos (B,) each slot's current position. Grid (B, KV, n_live), pages
+innermost. GQA: the G = H//KV query heads of one KV head share a tile.
+
+``paged_attn_ref`` is the pure-jnp oracle (gather + masked softmax) --
+also the hot-path implementation on non-TPU backends, where interpret
+mode would run the kernel body in Python per grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+# full-head-dim tiles: the lane axis must fill (or evenly split) the
+# 128-wide MXU; the sets below are what the q/k dot supports without
+# implicit padding that silently corrupts the accumulation
+MXU_HEAD_DIMS = (64, 112, 128, 256)
+
+
+def check_head_dim(hd: int, *, interpret: bool, kernel: str):
+    """Registry-style validation: on TPU an unsupported head dim must be
+    a loud error, not silent tile-padding misbehavior. Interpret mode
+    (CI parity tests) runs any head dim."""
+    if not interpret and hd not in MXU_HEAD_DIMS:
+        raise ValueError(
+            f"{kernel}: head_dim {hd} is not MXU-aligned; supported head "
+            f"dims: {list(MXU_HEAD_DIMS)} (interpret=True lifts this for "
+            f"correctness tests)")
+
+
+def _decode_kernel(pages_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, ps, n_live, scale):
+    bi = pl.program_id(0)
+    pp = pl.program_id(2)
+
+    @pl.when(pp == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[bi]
+    # a page is live iff its first slot is <= pos; later pages of the
+    # table hold this slot's future (or another slot's trash) -- skipped
+    live = pp * ps <= pos
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (ps, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        k_pos = pp * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(k_pos <= pos, s, _NEG_INF)             # (G, ps)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(pp == n_live - 1)
+    def _():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode(q, k_pages, v_pages, pages, pos, *,
+                 interpret: bool = False):
+    """q: (B, H, hd); k/v pools: (NP, ps, KV, hd); pages: (B, n_live)
+    int32 physical page ids; pos: (B,) int32 -> (B, H, hd).
+
+    Positions > pos[b] (this slot's dead tail, unallocated table entries
+    pointing at the trash page) are masked out; page n_live*ps .. S_max
+    is never read at all.
+    """
+    b, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    g = h // kvh
+    n_live = pages.shape[1]
+    check_head_dim(hd, interpret=interpret, kernel="flash_decode")
+    qg = q.reshape(b, kvh, g, hd)
+
+    def qmap(bi, kv, pp, pages_ref, pos_ref):
+        return (bi, kv, 0, 0)
+
+    def kvmap(bi, kv, pp, pages_ref, pos_ref):
+        return (pages_ref[bi, pp], 0, kv, 0)
+
+    kern = functools.partial(_decode_kernel, ps=ps, n_live=n_live,
+                             scale=1.0 / float(hd) ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # pages, pos
+        grid=(b, kvh, n_live),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), qmap),
+            pl.BlockSpec((1, ps, 1, hd), kvmap),
+            pl.BlockSpec((1, ps, 1, hd), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), pos.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(b, h, hd)
+
+
+def paged_attn_ref(q, k_pages, v_pages, pages, pos):
+    """jnp oracle / non-TPU hot path: gather the live pages back into
+    logical order and run masked GQA attention over them. Reads
+    n_live * ps keys instead of S_max -- the same dead-tail skip the
+    kernel does, expressed as a (bucketed-static) gather."""
+    b, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_live = pages.shape[1]
+    kk = k_pages[pages].reshape(b, n_live * ps, kvh, hd)
+    vv = v_pages[pages].reshape(b, n_live * ps, kvh, hd)
+    valid = jnp.arange(n_live * ps)[None, :] <= pos[:, None]
+    from repro.models.layers import attention
+    out = attention(q[:, None], kk, vv, causal=False, kv_mask=valid,
+                    chunk=0)
+    return out[:, 0]

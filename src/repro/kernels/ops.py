@@ -18,6 +18,18 @@ from repro.kernels import zo_perturb as _k
 _INTERPRET = jax.default_backend() != "tpu"
 
 
+def paged_decode_attn(q, k_pages, v_pages, pages, pos):
+    """Single-token attention over a paged KV pool: the Pallas
+    flash-decoding kernel on TPU, the jnp gather reference elsewhere
+    (decode is a hot loop -- interpret mode's per-grid-step Python body
+    would dominate it; the reference is the same math as one XLA graph).
+    """
+    from repro.kernels import flash_decode as _fd
+    if _INTERPRET:
+        return _fd.paged_attn_ref(q, k_pages, v_pages, pages, pos)
+    return _fd.flash_decode(q, k_pages, v_pages, pages, pos)
+
+
 def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
            block=(256, 256), prime_offset: int = 0, prehashed: bool = False,
            scale=None):

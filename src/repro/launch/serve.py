@@ -107,6 +107,16 @@ def main():
                          "(replay must apply the same decay coefficient)")
     ap.add_argument("--cache-mb", type=float, default=None,
                     help="adapter-store byte budget for materialized trees")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: attention K/V in a shared page "
+                         "pool with per-slot page tables (decode reads "
+                         "only live pages via the flash-decoding kernel)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="total pool pages incl. the trash page "
+                         "(default: slots x ceil(max_len/page_size) + 1, "
+                         "i.e. dense capacity)")
     args = ap.parse_args()
 
     if args.family:
@@ -139,7 +149,9 @@ def main():
 
     engine = ServeEngine(cfg, adapters, n_slots=args.slots,
                          max_len=args.prompt_len + args.gen,
-                         seed=args.seed)
+                         seed=args.seed, paged=args.paged,
+                         page_size=args.page_size,
+                         pool_pages=args.pool_pages)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
                            dtype=np.int32)
@@ -155,11 +167,14 @@ def main():
         tag = c.user if c.user is not None else "base"
         print(f"[serve] rid={c.rid} user={tag}: {c.tokens.tolist()}")
     st = engine.stats
+    paged_note = (f" | paged: {engine.pool_pages} pages x "
+                  f"{engine.page_size} tok, peak in use "
+                  f"{st.peak_pages_in_use}" if engine.paged else "")
     print(f"[serve] {args.requests} reqs x ({args.prompt_len} prompt + "
           f"{args.gen} gen) in {dt:.2f}s | prefill {st.prefill_tps:.0f} "
           f"tok/s | decode {st.decode_tps:.0f} tok/s | "
           f"adapter materializations: {adapters.stats['misses']} "
-          f"(hits {adapters.stats['hits']})")
+          f"(hits {adapters.stats['hits']})" + paged_note)
 
 
 if __name__ == "__main__":

@@ -2,13 +2,24 @@
 KV cache. Full-sequence apply wraps :func:`repro.models.layers.attn_apply`
 (fused-ZO aware); prefill writes cache positions [0, P) in one
 ``dynamic_update_slice``; decode updates position ``pos`` (scalar, or a
-per-slot (B,) vector for continuous batching)."""
+per-slot (B,) vector for continuous batching).
+
+Paged mode: the K/V leaves can instead live in a shared page pool
+(``k_pages``/``v_pages``: (n_pages, page_size, KV, hd) per layer) with a
+per-slot page table threaded through ``rc.pages``. Decode then writes
+the new token into its slot's page and attends only over live pages via
+the flash-decoding kernel (TPU) or its gather reference -- the dense
+path's full-S_max read of dead cache disappears. Physical page 0 is the
+pool's trash page: masked-out slots (rc.write_mask) and unallocated page
+table entries point there, so scatters need no gather-merge and gathers
+need no index clamping."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import paged_decode_attn
 from repro.models import layers as L
 from repro.models.blocks.base import BlockType, register_block
 
@@ -24,10 +35,41 @@ def _state_spec(cfg, bsz, max_len, dtype):
     return {"k": (shape, dtype), "v": (shape, dtype)}
 
 
+def _paged_state_spec(cfg, dtype):
+    shape = (cfg.n_kv_heads, cfg.resolved_head_dim)
+    return {"k_pages": (shape, dtype), "v_pages": (shape, dtype)}
+
+
+def _decode_paged(cfg, p, state, x, rc):
+    """One-token attention against the shared page pool. ``rc.pos`` is
+    the (B,) per-slot position, ``rc.pages`` the (B, n_live) physical
+    page table slice covering every live page."""
+    ck, cv = state["k_pages"], state["v_pages"]     # (NP, ps, KV, hd)
+    b = x.shape[0]
+    ps = ck.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(rc.pos), (b,))
+    q, k, v = L.attn_project_qkv(cfg, p, x)       # (B,1,H,hd),(B,1,KV,hd)
+    if cfg.pos == "rope":
+        cs = L.rope_cos_sin(pos[:, None], cfg.resolved_head_dim,
+                            cfg.rope_pct, cfg.rope_theta)
+        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
+    phys = jnp.take_along_axis(rc.pages, (pos // ps)[:, None], axis=1)[:, 0]
+    if rc.write_mask is not None:
+        phys = jnp.where(rc.write_mask, phys, 0)    # masked slots -> trash
+    off = pos % ps
+    ck = ck.at[phys, off].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[phys, off].set(v[:, 0].astype(cv.dtype))
+    out = paged_decode_attn(q[:, 0], ck, cv, rc.pages, pos)
+    return (L.dense(p["wo"], out.reshape(b, 1, -1)),
+            {"k_pages": ck, "v_pages": cv})
+
+
 def _decode_step(cfg, p, state, x, rc, ctx=None, causal=None):
     """One-token attention against the cache layer. ``rc.pos`` is a
     scalar (the whole batch decodes at one position) or a (B,) vector
     (continuous batching: each slot at its own position)."""
+    if "k_pages" in state:
+        return _decode_paged(cfg, p, state, x, rc)
     ck, cv = state["k"], state["v"]
     b = x.shape[0]
     pos = jnp.asarray(rc.pos)
@@ -72,4 +114,5 @@ def _prefill(cfg, p, state, x, rc, ctx=None, causal=None):
 
 ATTENTION = register_block(BlockType(
     name="attention", init=L.attn_init, apply=_apply,
-    state_spec=_state_spec, prefill=_prefill, decode_step=_decode_step))
+    state_spec=_state_spec, prefill=_prefill, decode_step=_decode_step,
+    paged_state_spec=_paged_state_spec))

@@ -49,6 +49,8 @@ class RunCtx:
     pos: Any = None            # scalar or (B,) decode position
     kv_mask: Any = None        # (B, T) key-validity mask (full mode)
     enc_out: Any = None        # (B, T_enc, D) encoder output (cross-attn)
+    pages: Any = None          # (B, n_live) physical page ids (paged decode)
+    write_mask: Any = None     # (B,) bool: slots allowed to write state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +62,13 @@ class BlockType:
     prefill: Optional[Callable] = None   # (cfg, p, state, x, rc, **opts)
     decode_step: Optional[Callable] = None
     mutable_state: bool = True
+    # per-token decode state that can live in a shared page pool:
+    # (cfg, dtype) -> {name: (per-position shape, dtype)}; the runtime
+    # builds (n_layers, n_pages, page_size, *shape) pool leaves and the
+    # block's decode_step reads/writes them through rc.pages. None means
+    # the block's state stays (n_layers, B, ...) even in a paged cache
+    # (mamba/rwkv recurrent state is O(1) per slot -- nothing to page).
+    paged_state_spec: Optional[Callable] = None
 
     @property
     def stateful(self) -> bool:

@@ -277,14 +277,54 @@ def init_cache(plan: ModelPlan, bsz, max_len, dtype):
     return {plan.stack.scope: sub}
 
 
-def decode_step(plan: ModelPlan, params, cache, tokens, pos):
+def plan_pages(plan: ModelPlan) -> bool:
+    """True iff any sublayer of the main stack has pageable state."""
+    return any(get_block(sl.block).paged_state_spec is not None
+               for sl in plan.stack.sublayers)
+
+
+def init_paged_cache(plan: ModelPlan, bsz, n_pages, page_size, dtype,
+                     max_len=None):
+    """Paged StateCache: pageable leaves (attention K/V) become
+    ``(n_layers, n_pages, page_size, ...)`` pool leaves shared by every
+    slot through a page table; everything else (mamba/rwkv recurrent
+    state -- O(1) per slot) keeps the dense (n_layers, B, ...) layout.
+    Physical page 0 is reserved as the trash page (unallocated table
+    entries and masked-out writes land there), so allocators hand out
+    pages 1..n_pages-1.
+    """
+    cfg = plan.cfg
+    sub: dict = {}
+    for sl in plan.stack.sublayers:
+        bt = get_block(sl.block)
+        if not bt.stateful:
+            continue
+        if bt.paged_state_spec is not None:
+            spec = bt.paged_state_spec(cfg, dtype)
+            leaves = {name: jnp.zeros(
+                (plan.stack.n_layers, n_pages, page_size) + shape, dt)
+                for name, (shape, dt) in spec.items()}
+        else:
+            spec = bt.state_spec(cfg, bsz, max_len or cfg.max_seq, dtype)
+            leaves = {name: jnp.zeros((plan.stack.n_layers,) + shape, dt)
+                      for name, (shape, dt) in spec.items()}
+        _set(sub, sl.mixer, leaves)
+    return {plan.stack.scope: sub}
+
+
+def decode_step(plan: ModelPlan, params, cache, tokens, pos, pages=None,
+                write_mask=None):
     """tokens: (B, 1) -> logits (B, 1, V); cache updated at ``pos``
-    (scalar, or (B,) for continuous batching)."""
+    (scalar, or (B,) for continuous batching). With a paged cache,
+    ``pages`` is the (B, n_live) physical page table slice and
+    ``write_mask`` optionally confines state writes to a slot subset
+    (masked slots scatter into the trash page)."""
     cfg = plan.cfg
     x = L.embed_apply(cfg, params["embed"], tokens,
                       positions=_decode_positions(pos))
+    rc = RunCtx(pos=pos, pages=pages, write_mask=write_mask)
     x, state = _stack_seq(cfg, plan.stack, params, cache[plan.stack.scope],
-                          x, RunCtx(pos=pos), "decode")
+                          x, rc, "decode")
     x = L.norm_apply(cfg, params["ln_f"], x)
     logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
     return logits, {plan.stack.scope: state}

@@ -252,6 +252,10 @@ _CACHE_LAYOUTS = {
     "ssm": (1, None, 2),              # (nb, B, di, n): di over model
     "state": (1, 2, None),            # (L, B, H, hd, hd): H over model
     "x_prev": (1, None, None),        # rwkv token-shift buffers
+    # paged KV pools (L, n_pages, page_size, KV, hd): no batch axis --
+    # slots address the shared pool through a page table, so shard the
+    # page axis the way dense K/V shards its sequence axis
+    "k_pages": (None, 1, None), "v_pages": (None, 1, None),
 }
 
 
@@ -265,9 +269,10 @@ def cache_spec(cache_like: PyTree, mesh) -> PyTree:
         if bd is not None and bd < l.ndim:
             spec[bd] = _fit(mesh, l.shape[bd], "data")
         if sd is not None and sd < l.ndim:
-            # sequence (or head) axis over model; spill onto data when the
-            # batch is too small to use it (long-context batch=1 decode)
-            if spec[bd] is None and bd is not None:
+            # sequence (or page/head) axis over model; spill onto data
+            # when no batch axis is using it (long-context batch=1
+            # decode, or a pool leaf with no batch axis at all)
+            if bd is None or spec[bd] is None:
                 spec[sd] = _fit(mesh, l.shape[sd], "model", "data")
             else:
                 spec[sd] = _fit(mesh, l.shape[sd], "model")

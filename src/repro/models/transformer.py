@@ -37,6 +37,7 @@ depth -- essential for compiling 61-layer 1T-param configs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -56,7 +57,7 @@ __all__ = ["Model", "build_model", "build_plan", "softmax_xent",
 PyTree = Any
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Model:
     cfg: ModelConfig
     init: Callable
@@ -66,6 +67,11 @@ class Model:
     decode_step: Optional[Callable] = None
     prefill: Optional[Callable] = None
     plan: Optional[ModelPlan] = None
+    # paged serving: None when no sublayer has pageable state (rwkv6's
+    # recurrent state never pages -- a "paged" engine then runs the
+    # dense layout). Signature: init_paged_cache(bsz, n_pages,
+    # page_size, max_len=None); decode_step takes pages=/write_mask=.
+    init_paged_cache: Optional[Callable] = None
 
 
 def _no_decode(*_args, **_kwargs):
@@ -242,7 +248,13 @@ _INITS = {"dense": _lm_init, "moe": _lm_init, "encoder": _lm_init,
 # the facade
 
 
+@functools.lru_cache(maxsize=None)
 def build_model(cfg: ModelConfig) -> Model:
+    """Memoized on the (frozen, hashable) config: every caller holding
+    the same config shares ONE Model instance, so the jitted serving /
+    decode entry points traced against its bound functions hit the
+    compilation cache across engines instead of re-tracing per engine
+    (the dominant cost of the pre-paging decode baseline -- table3)."""
     plan = build_plan(cfg)
     dtype = L._dt(cfg)
     init = partial(_INITS[cfg.family], cfg)
@@ -262,4 +274,9 @@ def build_model(cfg: ModelConfig) -> Model:
             plan, bsz, max_len or cfg.max_seq, dtype),
         decode_step=partial(RT.decode_step, plan),
         prefill=None if cfg.n_classes else partial(RT.prefill, plan),
+        init_paged_cache=(
+            (lambda bsz, n_pages, page_size, max_len=None:
+             RT.init_paged_cache(plan, bsz, n_pages, page_size, dtype,
+                                 max_len=max_len))
+            if RT.plan_pages(plan) else None),
     )

@@ -20,10 +20,34 @@ classic multi-model batching tradeoff (cf. S-LoRA-style adapter
 batching), except here an "adapter" is a replayed scalar log, not extra
 weights in the batch.
 
+Paged KV (``paged=True``): instead of every slot pre-allocating a dense
+(max_len, KV, hd) strip per layer, attention K/V lives in a shared pool
+of fixed-size pages with a per-slot page table. Pages are *reserved* at
+admission (the request's worst-case ``ceil((plen+max_new)/page_size)``,
+so mid-flight growth can never dead-lock) but only *allocated* as the
+sequence actually reaches them, and freed the moment the slot finishes.
+Slot count is then bounded by tokens resident, not ``slots x max_len``:
+a pool sized for 4 dense max-len slots holds every short request that
+fits, concurrently. Decode reads only live pages -- the flash-decoding
+kernel (TPU) / gather reference skips each slot's dead tail -- with the
+live page count bucketed to powers of two so the step stays a handful
+of compiled shapes. Physical page 0 is the trash page: freed slots'
+table rows and masked-out adapter lanes scatter there, which keeps the
+multi-adapter merge a leaf-name split (pool leaves: take new; dense
+recurrent leaves: masked lane select) instead of a page-level scatter.
+
+Families without pageable state (rwkv6: O(1) recurrent state per slot)
+run ``paged=True`` as the dense layout -- same admission, same tokens.
+
 The engine is family-agnostic: the block-registry runtime's unified
-StateCache puts every leaf at (n_layers, B, ...) -- batch on axis 1 for
-every family -- so slot scatter/merge is one ``jax.tree.map``, with no
-per-family axis table.
+StateCache puts every dense leaf at (n_layers, B, ...) -- batch on axis
+1 for every family -- so slot scatter/merge is one ``jax.tree.map``,
+with no per-family axis table. Jitted serving entry points are cached
+per Model (see ``_serving_fns``): constructing an engine re-uses the
+compiled decode/prefill/install executables instead of re-tracing them,
+which -- together with keeping the sampler's key-split off the
+greedy-only hot path -- is where the pre-paging decode baseline lost
+most of its step budget (table3).
 
 MoE caveat: expert capacity is contended across the whole slot batch, so
 a slot's logits can depend on what its neighbors decode -- inherent to
@@ -36,7 +60,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import partial
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +103,8 @@ class EngineStats:
     decode_steps: int = 0
     admitted: int = 0
     finished: int = 0
+    peak_active_slots: int = 0
+    peak_pages_in_use: int = 0    # paged mode only (excludes trash page)
 
     @property
     def prefill_tps(self) -> float:
@@ -89,9 +115,112 @@ class EngineStats:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
 
+def _merge_paged(cache, new, mask):
+    """Multi-adapter merge for a paged cache: pool leaves were written
+    through the page table (masked lanes scattered into the trash page),
+    so the new pool is already correct for every slot; dense (L, B, ...)
+    leaves lane-select like the unpaged engine."""
+    mask = jnp.asarray(mask, bool)
+
+    def pick(path, o, n):
+        if str(getattr(path[-1], "key", path[-1])).endswith("_pages"):
+            return n
+        return jnp.where(jnp.reshape(mask, (1, -1) + (1,) * (o.ndim - 2)),
+                         n, o)
+
+    return jax.tree_util.tree_map_with_path(pick, cache, new)
+
+
+# per-Model jitted serving entry points. build_model memoizes Model on
+# the config, so every engine over the same config shares ONE set of
+# compiled executables -- engine construction costs no re-trace.
+_SERVING_FNS: Dict[int, Dict[str, Any]] = {}
+
+
+def _serving_fns(model) -> Dict[str, Any]:
+    fns = _SERVING_FNS.get(id(model))
+    if fns is not None:
+        return fns
+    decode_step = model.decode_step
+
+    # the slot-table cache is donated on every hot-path call: decode
+    # updates it in place instead of copying the full (n_slots,
+    # max_len) KV per token (the reference serve() loop donates too)
+    @partial(jax.jit, donate_argnums=(1,))
+    def decode_all(params, cache, toks, pos):
+        return decode_step(params, cache, toks, pos)
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def decode_masked(params, cache, toks, pos, mask):
+        logits, new = decode_step(params, cache, toks, pos)
+        # every StateCache leaf batches on axis 1 (same ragged-slot
+        # helper the TrainEngine uses on its axis-0 user stack)
+        return logits, masked_merge(cache, new, mask, axis=1)
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def decode_all_paged(params, cache, toks, pos, pages):
+        return decode_step(params, cache, toks, pos, pages=pages)
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def decode_masked_paged(params, cache, toks, pos, pages, mask):
+        logits, new = decode_step(params, cache, toks, pos, pages=pages,
+                                  write_mask=mask)
+        return logits, _merge_paged(cache, new, mask)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def install(cache, prefill_cache, slot):
+        """Scatter a B=1 prefilled cache into slot row ``slot``."""
+
+        def put(c, row):
+            return c.at[:, slot].set(
+                jnp.take(row, 0, axis=1).astype(c.dtype))
+
+        return jax.tree.map(put, cache, prefill_cache)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def install_paged(cache, prefill_cache, phys, slot):
+        """Scatter a B=1 prefilled *dense* cache into the paged slot:
+        pool leaves (``X_pages``) page their dense twin ``X`` into the
+        slot's physical pages; dense leaves install into row ``slot``."""
+        fresh = {jax.tree_util.keystr(p): v for p, v in
+                 jax.tree_util.tree_leaves_with_path(prefill_cache)}
+        npg = phys.shape[0]
+
+        def put(path, c):
+            ks = jax.tree_util.keystr(path)
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name.endswith("_pages"):
+                row = fresh[ks.replace(name, name[:-len("_pages")])]
+                ps = c.shape[2]
+                src = row[:, 0, :npg * ps].reshape(
+                    (row.shape[0], npg, ps) + row.shape[3:])
+                return c.at[:, phys].set(src.astype(c.dtype))
+            return c.at[:, slot].set(
+                jnp.take(fresh[ks], 0, axis=1).astype(c.dtype))
+
+        return jax.tree_util.tree_map_with_path(put, cache)
+
+    fns = {
+        "decode_all": decode_all,
+        "decode_masked": decode_masked,
+        "decode_all_paged": decode_all_paged,
+        "decode_masked_paged": decode_masked_paged,
+        "install": install,
+        "install_paged": install_paged,
+        "prefill": (jax.jit(model.prefill, donate_argnums=(1,))
+                    if model.prefill is not None else None),
+        "decode_one": jax.jit(decode_step,   # per-token prefill fallback
+                              donate_argnums=(1,)),
+    }
+    _SERVING_FNS[id(model)] = fns
+    return fns
+
+
 class ServeEngine:
     def __init__(self, cfg, store: AdapterStore, n_slots: int = 4,
-                 max_len: Optional[int] = None, seed: int = 0):
+                 max_len: Optional[int] = None, seed: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 pool_pages: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         if self.model.decode_step is None:
@@ -99,9 +228,29 @@ class ServeEngine:
         self.store = store
         self.n_slots = n_slots
         self.max_len = max_len or cfg.max_seq
-        self.cache = self.model.init_cache(n_slots, self.max_len)
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
+
+        # families without pageable state serve the dense layout even
+        # under paged=True (nothing to page; admission is identical)
+        self.paged = bool(paged and self.model.init_paged_cache is not None)
+        self.page_size = page_size
+        if self.paged:
+            self.slot_pages = -(-self.max_len // page_size)  # per-slot max
+            if pool_pages is None:       # default: dense capacity + trash
+                pool_pages = n_slots * self.slot_pages + 1
+            if pool_pages < 2:
+                raise ValueError("pool_pages must be >= 2 (trash + 1)")
+            self.pool_pages = pool_pages
+            self.cache = self.model.init_paged_cache(
+                n_slots, pool_pages, page_size, max_len=self.max_len)
+            self._free_pages = list(range(pool_pages - 1, 0, -1))
+            self._reserved = 0                     # pages promised, total
+            self._slot_alloc: List[List[int]] = [[] for _ in range(n_slots)]
+            self._slot_reserve = np.zeros(n_slots, np.int64)
+            self._table = np.zeros((n_slots, self.slot_pages), np.int32)
+        else:
+            self.cache = self.model.init_cache(n_slots, self.max_len)
 
         self.queue: deque = deque()
         self._next_rid = 0
@@ -112,40 +261,27 @@ class ServeEngine:
         self._last = np.zeros(n_slots, np.int32)
         self._out: List[List[int]] = [[] for _ in range(n_slots)]
         self._finished: List[Completion] = []
+        self._fns = _serving_fns(self.model)
 
-        decode_step = self.model.decode_step
+    # ---- page pool -------------------------------------------------------
+    def _pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
 
-        # the slot-table cache is donated on every hot-path call: decode
-        # updates it in place instead of copying the full (n_slots,
-        # max_len) KV per token (the reference serve() loop donates too)
-        @partial(jax.jit, donate_argnums=(1,))
-        def decode_all(params, cache, toks, pos):
-            return decode_step(params, cache, toks, pos)
+    def _alloc_page(self, slot: int) -> None:
+        page = self._free_pages.pop()
+        lp = len(self._slot_alloc[slot])
+        self._slot_alloc[slot].append(page)
+        self._table[slot, lp] = page
+        in_use = self.pool_pages - 1 - len(self._free_pages)
+        self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
+                                           in_use)
 
-        @partial(jax.jit, donate_argnums=(1,))
-        def decode_masked(params, cache, toks, pos, mask):
-            logits, new = decode_step(params, cache, toks, pos)
-            # every StateCache leaf batches on axis 1 (same ragged-slot
-            # helper the TrainEngine uses on its axis-0 user stack)
-            return logits, masked_merge(cache, new, mask, axis=1)
-
-        @partial(jax.jit, donate_argnums=(0,))
-        def install(cache, prefill_cache, slot):
-            """Scatter a B=1 prefilled cache into slot row ``slot``."""
-
-            def put(c, row):
-                return c.at[:, slot].set(
-                    jnp.take(row, 0, axis=1).astype(c.dtype))
-
-            return jax.tree.map(put, cache, prefill_cache)
-
-        self._decode_all = decode_all
-        self._decode_masked = decode_masked
-        self._install = install
-        self._prefill = (jax.jit(self.model.prefill, donate_argnums=(1,))
-                         if self.model.prefill is not None else None)
-        self._decode_one = jax.jit(decode_step,   # per-token prefill fallback
-                                   donate_argnums=(1,))
+    def _release_slot_pages(self, slot: int) -> None:
+        self._free_pages.extend(reversed(self._slot_alloc[slot]))
+        self._reserved -= int(self._slot_reserve[slot])
+        self._slot_reserve[slot] = 0
+        self._slot_alloc[slot] = []
+        self._table[slot] = 0                      # -> trash page
 
     # ---- request lifecycle ----------------------------------------------
     def submit(self, req: Request) -> int:
@@ -155,6 +291,13 @@ class ServeEngine:
                              f"exceeds max_len({self.max_len})")
         if req.max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if self.paged:
+            need = self._pages_needed(plen + req.max_new)
+            if need > self.pool_pages - 1:
+                raise ValueError(
+                    f"request needs {need} pages "
+                    f"({plen}+{req.max_new} tokens @ page_size "
+                    f"{self.page_size}); pool holds {self.pool_pages - 1}")
         req.rid = self._next_rid
         self._next_rid += 1
         self.queue.append(req)
@@ -164,26 +307,49 @@ class ServeEngine:
         return [i for i in range(self.n_slots) if not self._active[i]]
 
     def _admit(self):
-        """Prefill queued requests into free slots (mid-flight)."""
+        """Prefill queued requests into free slots (mid-flight). Paged
+        mode additionally requires the request's worst-case page count
+        to fit in the unreserved pool -- admission is the only gate, so
+        growth during decode can never fail. FIFO: a head request that
+        does not fit blocks the queue until slots/pages free up."""
         for slot in self._free_slots():
             if not self.queue:
                 return
-            req = self.queue.popleft()
+            req = self.queue[0]
+            plen = int(np.asarray(req.prompt).size)
+            if self.paged:
+                need = self._pages_needed(plen + req.max_new)
+                if self._reserved + need > self.pool_pages - 1:
+                    return                       # wait for pages to free
+            self.queue.popleft()
             params = self.store.materialize(req.user)
             prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
-            plen = prompt.shape[1]
             t0 = time.perf_counter()
-            fresh = self.model.init_cache(1, self.max_len)
-            if self._prefill is not None:
-                logits, fresh = self._prefill(params, fresh,
-                                              jnp.asarray(prompt))
+            if self.paged:
+                self._reserved += need
+                self._slot_reserve[slot] = need
+                n_prompt_pages = self._pages_needed(plen)
+                for _ in range(n_prompt_pages):
+                    self._alloc_page(slot)
+                fresh_len = n_prompt_pages * self.page_size
+            else:
+                fresh_len = self.max_len
+            fresh = self.model.init_cache(1, fresh_len)
+            if self._fns["prefill"] is not None:
+                logits, fresh = self._fns["prefill"](params, fresh,
+                                                     jnp.asarray(prompt))
             else:
                 toks = jnp.asarray(prompt)
                 for t in range(plen):
-                    logits, fresh = self._decode_one(params, fresh,
-                                                     toks[:, t:t + 1],
-                                                     jnp.int32(t))
-            self.cache = self._install(self.cache, fresh, slot)
+                    logits, fresh = self._fns["decode_one"](
+                        params, fresh, toks[:, t:t + 1], jnp.int32(t))
+            if self.paged:
+                phys = jnp.asarray(
+                    np.asarray(self._slot_alloc[slot], np.int32))
+                self.cache = self._fns["install_paged"](
+                    self.cache, fresh, phys, slot)
+            else:
+                self.cache = self._fns["install"](self.cache, fresh, slot)
             jax.block_until_ready(self.cache)
             self.stats.prefill_s += time.perf_counter() - t0
             self.stats.prefill_tokens += plen
@@ -198,6 +364,8 @@ class ServeEngine:
             self._remaining[slot] = req.max_new - 1
             self._last[slot] = tok
             self._out[slot] = [tok]
+            self.stats.peak_active_slots = max(self.stats.peak_active_slots,
+                                               int(self._active.sum()))
             if self._remaining[slot] == 0:
                 self._finish(slot)
 
@@ -216,9 +384,26 @@ class ServeEngine:
             tokens=np.asarray(self._out[slot], np.int32)))
         self._active[slot] = False
         self._req[slot] = None
+        if self.paged:
+            self._release_slot_pages(slot)
         self.stats.finished += 1
 
     # ---- decode ---------------------------------------------------------
+    def _live_pages(self, pos: np.ndarray):
+        """Grow page tables to cover this step's write position, then
+        return the (n_slots, n_live) table slice spanning every live
+        page -- n_live bucketed to powers of two so the decode dispatch
+        compiles once per bucket, not once per length."""
+        for slot in np.flatnonzero(self._active):
+            while len(self._slot_alloc[slot]) <= pos[slot] // self.page_size:
+                self._alloc_page(slot)          # reservation guarantees one
+        maxp = 1 + int(pos[self._active].max()) // self.page_size
+        n_live = 1
+        while n_live < maxp:
+            n_live *= 2
+        n_live = min(n_live, self.slot_pages)
+        return jnp.asarray(self._table[:, :n_live])
+
     def step(self):
         """Admit whatever fits, then advance every active slot one token."""
         self._admit()
@@ -226,13 +411,20 @@ class ServeEngine:
             return
         t0 = time.perf_counter()
         toks = jnp.asarray(self._last.reshape(self.n_slots, 1))
-        pos = jnp.asarray(np.minimum(self._pos, self.max_len - 1))
+        pos_np = np.minimum(self._pos, self.max_len - 1)
+        pos = jnp.asarray(pos_np)
+        pages = self._live_pages(pos_np) if self.paged else None
         users = {self._req[i].user for i in range(self.n_slots)
                  if self._active[i]}
         merged = np.zeros((self.n_slots, self.cfg.vocab), np.float32)
         if len(users) == 1:
             params = self.store.materialize(next(iter(users)))
-            lg, self.cache = self._decode_all(params, self.cache, toks, pos)
+            if self.paged:
+                lg, self.cache = self._fns["decode_all_paged"](
+                    params, self.cache, toks, pos, pages)
+            else:
+                lg, self.cache = self._fns["decode_all"](
+                    params, self.cache, toks, pos)
             merged[:] = np.asarray(lg[:, -1, :], np.float32)
         else:
             for u in users:
@@ -240,11 +432,15 @@ class ServeEngine:
                                  and self._req[i].user == u
                                  for i in range(self.n_slots)])
                 params = self.store.materialize(u)
-                lg, self.cache = self._decode_masked(
-                    params, self.cache, toks, pos, jnp.asarray(mask))
+                if self.paged:
+                    lg, self.cache = self._fns["decode_masked_paged"](
+                        params, self.cache, toks, pos, pages,
+                        jnp.asarray(mask))
+                else:
+                    lg, self.cache = self._fns["decode_masked"](
+                        params, self.cache, toks, pos, jnp.asarray(mask))
                 merged[mask] = np.asarray(lg[:, -1, :], np.float32)[mask]
 
-        self.key, keys = sampling.step_keys(self.key, self.n_slots)
         n_active = int(self._active.sum())
         picked: Dict[int, int] = {}
         groups: Dict[tuple, List[int]] = {}   # (topk, temp) -> slots
@@ -255,6 +451,9 @@ class ServeEngine:
             else:
                 groups.setdefault((req.topk or self.cfg.vocab,
                                    req.temperature), []).append(int(slot))
+        if groups:          # key split only when someone actually samples
+            self.key, keys = sampling.step_keys(self.key, self.n_slots)
+            keys = np.asarray(keys)
         for (k, temp), slots in groups.items():   # one dispatch per combo
             toks_s = sampling.sample_topk(keys[np.asarray(slots)],
                                           jnp.asarray(merged[slots]), k, temp)

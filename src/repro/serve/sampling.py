@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 
+@partial(jax.jit, static_argnums=(1,))
 def step_keys(key, n_slots: int):
     """Advance the engine key one step; returns (new_key, (n_slots, ...)
     per-slot keys)."""

@@ -1,0 +1,189 @@
+"""Paged KV serving: runtime-level paged/dense decode parity, engine
+greedy bit-parity paged vs unpaged across families, and page-pool
+accounting (reservation admission, growth, free-on-finish).
+
+Set REPRO_FAMILY=<family[,family]> to restrict the engine parity matrix
+(the CI family matrix does).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import AdapterStore, Request, ServeEngine
+
+_FAM = os.environ.get("REPRO_FAMILY")
+# arch -> family, mirroring launch.serve.FAMILY_ARCHS (rwkv6 pins the
+# no-pageable-state degenerate path; jamba pins paged attention pools
+# coexisting with dense mamba recurrent state in one cache)
+ENGINE_ARCHS = {"gemma-2b": "dense", "rwkv6-7b": "ssm",
+                "jamba-v0.1-52b": "hybrid"}
+ARCHS = [a for a, f in ENGINE_ARCHS.items()
+         if not _FAM or f in _FAM.split(",")]
+
+
+def _records(n, k=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"step": i, "seed": int(rng.integers(2**31)),
+             "gs": rng.normal(size=k).astype(np.float32).tolist(),
+             "lr": 5e-2, "eps": 1e-2} for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# runtime level: paged decode_step == dense decode_step
+
+
+def test_runtime_paged_decode_matches_dense():
+    """Same tokens through a paged cache (scrambled page table, ragged
+    per-slot positions straddling page boundaries) and a dense cache
+    must produce the same logits every step."""
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, ps, n_live = 3, 4, 4
+    pos0 = np.array([ps - 1, ps, 2 * ps + 3], np.int32)  # boundary cases
+    max_len = int(pos0.max()) + 10
+
+    dense = model.init_cache(B, max_len)
+    paged = model.init_paged_cache(B, 1 + B * n_live, ps, max_len=max_len)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(np.arange(1, 1 + B * n_live))
+    table = perm.reshape(B, n_live).astype(np.int32)
+
+    # build matching histories: replay each slot's prefix token-by-token
+    # through both caches (dense scalar-pos decode vs paged decode)
+    hist = rng.integers(0, cfg.vocab, (B, max_len), dtype=np.int32)
+    for b in range(B):
+        for t in range(int(pos0[b])):
+            tok = jnp.asarray(hist[b:b + 1, t:t + 1])
+            one_d = model.init_cache(1, max_len) if t == 0 else one_d
+            _, one_d = model.decode_step(params, one_d, tok, jnp.int32(t))
+        if pos0[b]:
+            dense = jax.tree.map(
+                lambda c, r: c.at[:, b].set(r[:, 0]), dense, one_d)
+    # paged prefix: vector-pos decode over all slots at once
+    pos = np.zeros(B, np.int32)
+    pages = jnp.asarray(table)
+    for t in range(int(pos0.max())):
+        mask = pos0 > t
+        toks = jnp.asarray(hist[:, t:t + 1])
+        _, new = model.decode_step(params, paged, toks, jnp.asarray(pos),
+                                   pages=pages,
+                                   write_mask=jnp.asarray(mask))
+        paged = new
+        pos = np.where(mask, pos + 1, pos)
+    assert (pos == pos0).all()
+
+    steps = rng.integers(0, cfg.vocab, (B, 4), dtype=np.int32)
+    for step in range(4):
+        toks = jnp.asarray(steps[:, step:step + 1])
+        ld, dense = model.decode_step(params, dense, toks,
+                                      jnp.asarray(pos))
+        lp, paged = model.decode_step(params, paged, toks,
+                                      jnp.asarray(pos), pages=pages)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
+                                   rtol=2e-4, atol=2e-5)
+        pos = pos + 1
+
+
+def test_init_paged_cache_layouts():
+    """Attention K/V becomes pool leaves; recurrent state stays dense;
+    rwkv6 has nothing to page at all."""
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    model = build_model(cfg)
+    cache = model.init_paged_cache(2, 9, 4, max_len=32)
+    leaves = {str(getattr(p[-1], "key", p[-1])): l.shape for p, l in
+              jax.tree_util.tree_leaves_with_path(cache)}
+    assert any(n == "k_pages" and s[1:3] == (9, 4)
+               for n, s in leaves.items())
+    assert any(n in ("conv", "ssm") and s[1] == 2    # batch axis intact
+               for n, s in leaves.items())
+    assert build_model(get_config("rwkv6-7b").reduced()).init_paged_cache \
+        is None
+
+
+# ---------------------------------------------------------------------------
+# engine level: paged == unpaged, bit for bit
+
+
+def _run_engine(cfg, store, paged, plens, G, users=None, n_slots=2,
+                page_size=4, pool_pages=None):
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(10 + i),
+                                             (p,), 0, cfg.vocab), np.int32)
+               for i, p in enumerate(plens)]
+    eng = ServeEngine(cfg, store, n_slots=n_slots, max_len=max(plens) + G,
+                      seed=0, paged=paged, page_size=page_size,
+                      pool_pages=pool_pages)
+    rids = [eng.submit(Request(prompt=pr, max_new=G,
+                               user=users[i] if users else None))
+            for i, pr in enumerate(prompts)]
+    outs = {c.rid: c.tokens.tolist() for c in eng.run()}
+    return [outs[r] for r in rids], eng
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_engine_paged_matches_unpaged(arch):
+    """Greedy tokens must be bit-identical with and without paging --
+    staggered prompt lengths, more requests than slots (mid-flight
+    admission into recycled pages)."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    store = AdapterStore(model.init(jax.random.PRNGKey(0)))
+    plens, G = (5, 9, 7, 12), 6
+    a, _ = _run_engine(cfg, store, False, plens, G)
+    b, eng = _run_engine(cfg, store, True, plens, G)
+    assert a == b
+    if eng.paged:   # rwkv6 degenerates to the dense layout
+        assert eng.stats.peak_pages_in_use > 0
+        assert len(eng._free_pages) == eng.pool_pages - 1  # all freed
+
+
+def test_engine_paged_matches_unpaged_multi_adapter():
+    """Masked per-adapter dispatch + trash-page scatter: mixed base /
+    alice / bob slots stay bit-identical to the unpaged engine."""
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    store = AdapterStore(model.init(jax.random.PRNGKey(0)))
+    store.put("alice", _records(4, seed=1))
+    store.put("bob", _records(4, seed=2))
+    users = [None, "alice", "bob", "alice"]
+    a, _ = _run_engine(cfg, store, False, (5, 9, 7, 12), 6, users=users)
+    b, _ = _run_engine(cfg, store, True, (5, 9, 7, 12), 6, users=users)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# page-pool accounting
+
+
+def test_pool_exhaustion_queues_then_completes():
+    """A pool smaller than slots x max_len admits only what fits; queued
+    requests proceed as finishing slots free pages, and every request
+    still completes with full-length output."""
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    store = AdapterStore(model.init(jax.random.PRNGKey(0)))
+    plens, G = (6, 6, 6, 6, 6), 5     # 11 tokens -> 3 pages each @ ps=4
+    outs, eng = _run_engine(cfg, store, True, plens, G, n_slots=4,
+                            pool_pages=7)         # 6 usable: 2 in flight
+    assert all(len(o) == G for o in outs)
+    assert eng.stats.peak_active_slots == 2       # pool, not slots, bound
+    assert eng.stats.peak_pages_in_use <= 6
+    assert eng._reserved == 0 and len(eng._free_pages) == 6
+    unpaged, _ = _run_engine(cfg, store, False, plens, G, n_slots=4)
+    assert outs == unpaged                        # queueing changes order
+    #                                               of work, not tokens
+
+def test_oversized_request_rejected_at_submit():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    eng = ServeEngine(cfg, AdapterStore(model.init(jax.random.PRNGKey(0))),
+                      n_slots=2, max_len=24, paged=True, page_size=4,
+                      pool_pages=5)
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(prompt=np.zeros(6, np.int32), max_new=12))
