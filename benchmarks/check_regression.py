@@ -105,6 +105,23 @@ def check_table3(bench_dir: str):
            f"{rs.get('paged_peak_active_slots')} paged slots vs "
            f"{rs.get('dense_slots')} dense at {rs.get('kv_budget_pages')} "
            f"KV pages = {ratio}x (need >= 2x)")
+    # PR 8 headline: self-speculative decode (base drafts, base+delta
+    # verifies over shared pages) must be exact AND faster -- greedy
+    # bit-parity is a hard gate, throughput >= 1.3x the plain paged
+    # multi-adapter run, with the acceptance rate actually reported.
+    sp = t.get("decode_spec", {})
+    _check("table3/decode_spec_parity",
+           sp.get("greedy_parity") is True,
+           f"speculative greedy tokens == plain: "
+           f"{sp.get('greedy_parity')}")
+    _check("table3/decode_spec_speedup", sp.get("speedup", 0) >= 1.3,
+           f"spec {sp.get('spec_tok_per_s')} tok/s vs plain "
+           f"{sp.get('plain_tok_per_s')} = {sp.get('speedup')}x "
+           f"(need >= 1.3x)")
+    ar = sp.get("accept_rate")
+    _check("table3/decode_spec_accept_rate",
+           ar is not None and 0.0 < ar <= 1.0,
+           f"acceptance rate {ar} (must be reported and in (0, 1])")
 
 
 def check_table4(bench_dir: str):

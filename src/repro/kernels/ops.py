@@ -30,6 +30,18 @@ def paged_decode_attn(q, k_pages, v_pages, pages, pos):
     return _fd.flash_decode(q, k_pages, v_pages, pages, pos)
 
 
+def paged_verify_attn(q, k_pages, v_pages, pages, pos):
+    """Window attention over a paged KV pool for speculative verify:
+    q is (B, W, H, hd) -- W candidate tokens per slot, offset w reading
+    positions <= pos + w. Pallas flash-verify kernel on TPU, the jnp
+    gather reference elsewhere (same hot-loop rationale as
+    :func:`paged_decode_attn`)."""
+    from repro.kernels import flash_verify as _fv
+    if _INTERPRET:
+        return _fv.verify_attn_ref(q, k_pages, v_pages, pages, pos)
+    return _fv.flash_verify(q, k_pages, v_pages, pages, pos)
+
+
 def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
            block=(256, 256), prime_offset: int = 0, prehashed: bool = False,
            scale=None):

@@ -117,6 +117,12 @@ def main():
                     help="total pool pages incl. the trash page "
                          "(default: slots x ceil(max_len/page_size) + 1, "
                          "i.e. dense capacity)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="self-speculative decoding (needs --paged): the "
+                         "frozen base drafts up to K tokens per round into "
+                         "the slot's shared KV pages, base+delta verifies "
+                         "them in one batched window call; greedy output "
+                         "is bit-identical to plain decoding")
     args = ap.parse_args()
 
     if args.family:
@@ -151,7 +157,8 @@ def main():
                          max_len=args.prompt_len + args.gen,
                          seed=args.seed, paged=args.paged,
                          page_size=args.page_size,
-                         pool_pages=args.pool_pages)
+                         pool_pages=args.pool_pages,
+                         spec_k=args.spec_k)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
                            dtype=np.int32)
@@ -170,6 +177,11 @@ def main():
     paged_note = (f" | paged: {engine.pool_pages} pages x "
                   f"{engine.page_size} tok, peak in use "
                   f"{st.peak_pages_in_use}" if engine.paged else "")
+    if engine.spec_k:
+        paged_note += (f" | spec k={engine.spec_k}: accepted "
+                       f"{st.spec_accepted}/{st.spec_drafted} drafts "
+                       f"({st.spec_accept_rate:.0%}) in "
+                       f"{st.decode_steps} rounds")
     print(f"[serve] {args.requests} reqs x ({args.prompt_len} prompt + "
           f"{args.gen} gen) in {dt:.2f}s | prefill {st.prefill_tps:.0f} "
           f"tok/s | decode {st.decode_tps:.0f} tok/s | "

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import paged_decode_attn
+from repro.kernels.ops import paged_decode_attn, paged_verify_attn
 from repro.models import layers as L
 from repro.models.blocks.base import BlockType, register_block
 
@@ -95,6 +95,43 @@ def _decode_step(cfg, p, state, x, rc, ctx=None, causal=None):
     return L.dense(p["wo"], out.reshape(b, 1, -1)), {"k": ck, "v": cv}
 
 
+def _verify_paged(cfg, p, state, x, rc, ctx=None, causal=None):
+    """Speculative-verify window: score W candidate tokens per slot at
+    positions ``rc.pos .. rc.pos + W - 1`` against the page pool. The
+    verifier's own K/V for the window is scattered into the slot's pages
+    *first* (overwriting whatever the draft wrote there), so the window
+    read -- page gather + causal-in-window masking -- sees exactly the
+    K/V a sequential decode of those tokens would have cached:
+    verification is exact, and speculation costs zero extra KV HBM.
+    ``rc.write_mask`` is (B, W): offsets past a slot's live window (and
+    whole masked-out slots) scatter into the trash page."""
+    if "k_pages" not in state:
+        raise ValueError("verify window needs a paged KV cache "
+                         "(attention state has no k_pages pool)")
+    ck, cv = state["k_pages"], state["v_pages"]     # (NP, ps, KV, hd)
+    b, w = x.shape[:2]
+    ps = ck.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(rc.pos), (b,))
+    q, k, v = L.attn_project_qkv(cfg, p, x)       # (B,W,H,hd),(B,W,KV,hd)
+    posw = pos[:, None] + jnp.arange(w)[None, :]  # (B, W) logical positions
+    if cfg.pos == "rope":
+        cs = L.rope_cos_sin(posw, cfg.resolved_head_dim,
+                            cfg.rope_pct, cfg.rope_theta)
+        q, k = L.apply_rope(q, cs), L.apply_rope(k, cs)
+    phys = jnp.take_along_axis(rc.pages, posw // ps, axis=1)
+    if rc.write_mask is not None:
+        wm = jnp.asarray(rc.write_mask, bool)
+        if wm.ndim == 1:
+            wm = wm[:, None]
+        phys = jnp.where(wm, phys, 0)               # masked -> trash
+    off = posw % ps
+    ck = ck.at[phys, off].set(k.astype(ck.dtype))
+    cv = cv.at[phys, off].set(v.astype(cv.dtype))
+    out = paged_verify_attn(q, ck, cv, rc.pages, pos)
+    return (L.dense(p["wo"], out.reshape(b, w, -1)),
+            {"k_pages": ck, "v_pages": cv})
+
+
 def _prefill(cfg, p, state, x, rc, ctx=None, causal=None):
     """Full-prompt attention that also writes positions [0, S) of the
     cache layer -- causal masking keeps every prompt token's view
@@ -115,4 +152,4 @@ def _prefill(cfg, p, state, x, rc, ctx=None, causal=None):
 ATTENTION = register_block(BlockType(
     name="attention", init=L.attn_init, apply=_apply,
     state_spec=_state_spec, prefill=_prefill, decode_step=_decode_step,
-    paged_state_spec=_paged_state_spec))
+    paged_state_spec=_paged_state_spec, verify=_verify_paged))

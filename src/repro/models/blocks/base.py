@@ -50,7 +50,8 @@ class RunCtx:
     kv_mask: Any = None        # (B, T) key-validity mask (full mode)
     enc_out: Any = None        # (B, T_enc, D) encoder output (cross-attn)
     pages: Any = None          # (B, n_live) physical page ids (paged decode)
-    write_mask: Any = None     # (B,) bool: slots allowed to write state
+    write_mask: Any = None     # (B,) bool: slots allowed to write state;
+    #                            verify mode: (B, W) per-window-offset
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +70,13 @@ class BlockType:
     # the block's state stays (n_layers, B, ...) even in a paged cache
     # (mamba/rwkv recurrent state is O(1) per slot -- nothing to page).
     paged_state_spec: Optional[Callable] = None
+    # speculative-verify window: (cfg, p, state, x(B, W, D), rc, **opts)
+    # -> (y, new_state), scoring W candidate tokens at positions
+    # rc.pos..rc.pos+W-1 in one call (causal within the window). Blocks
+    # without it fall back to the runtime's per-offset decode_step scan,
+    # which additionally stacks a (W, ...) axis onto mutable state so
+    # the engine can roll back to the last accepted offset.
+    verify: Optional[Callable] = None
 
     @property
     def stateful(self) -> bool:

@@ -133,6 +133,10 @@ def attention(q, k, v, *, causal: bool, q_offset=0,
               kv_mask: Optional[jnp.ndarray] = None, chunk: int = 0):
     """GQA attention. q: (B, S, H, hd); k/v: (B, T, KV, hd).
 
+    kv_mask is (B, T) key validity shared by every query row, or
+    (B, S, T) with a mask per query row (speculative verify windows:
+    each candidate token has its own position limit).
+
     chunk > 0 and S % chunk == 0 and S > chunk: scan over query chunks so
     peak score memory is (B, H, chunk, T) instead of (B, H, S, T).
     """
@@ -148,7 +152,11 @@ def attention(q, k, v, *, causal: bool, q_offset=0,
             m = q_pos[:, None] >= kv_pos[None, :]
         m = m[None, None, None]                      # (1,1,1,S,T)
         if kv_mask is not None:
-            m = m & kv_mask[:, None, None, None, :]  # (B,1,1,1,T)
+            if kv_mask.ndim == 3:                    # per-query-row masks
+                rows = jnp.take(kv_mask, q_pos - q_offset, axis=1)
+                m = m & rows[:, None, None, :, :]    # (B,1,1,S,T)
+            else:
+                m = m & kv_mask[:, None, None, None, :]  # (B,1,1,1,T)
         return m
 
     if chunk and s > chunk and s % chunk == 0:

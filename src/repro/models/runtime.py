@@ -187,6 +187,65 @@ def _stack_seq(cfg, stack: StackPlan, params, state, x, rc: RunCtx,
     return x, out
 
 
+def _window_scan(bt, cfg, bp, ls, z, rc, opts):
+    """Generic verify fallback for recurrent blocks (mamba, rwkv):
+    run ``decode_step`` once per window offset and stack every mutable
+    state leaf along a leading (W,) axis -- offset i's entry is the
+    state after consuming window tokens 0..i, so the serving engine can
+    commit exactly the accepted prefix and discard the rest (the
+    recurrent analogue of the page-table rollback)."""
+    zw = jnp.moveaxis(z, 1, 0)[:, :, None, :]       # (W, B, 1, D)
+
+    def step(carry, zi):
+        y, ns = bt.decode_step(cfg, bp, carry, zi, rc, **opts)
+        return ns, (y, ns)
+
+    _, (ys, states) = jax.lax.scan(step, ls, zw)
+    y = jnp.moveaxis(ys[:, :, 0, :], 0, 1)          # (B, W, D)
+    return y, states                                # leaves: (W, B, ...)
+
+
+def _stack_verify(cfg, stack: StackPlan, params, state, x, rc: RunCtx):
+    """Stateful stack walk over a speculative-verify window: paged
+    blocks score the whole window in one call (``BlockType.verify``);
+    recurrent blocks fall back to a per-offset decode_step scan whose
+    mutable state gains a leading (W,) axis (see :func:`_window_scan`);
+    read-only state (cross-attn K/V) passes through untouched."""
+    blocks_p = params[stack.scope]
+
+    def body(h, xs):
+        bp, ls = xs
+        new = {}
+        for sl in stack.sublayers:
+            bt = get_block(sl.block)
+            z = L.norm_apply(cfg, _get(bp, sl.ln), h)
+            opts = dict(sl.opts)
+            if not bt.stateful:
+                y, _ = bt.apply(cfg, _get(bp, sl.mixer), z, rc, **opts)
+            elif bt.verify is not None:
+                y, ns = bt.verify(cfg, _get(bp, sl.mixer),
+                                  _get(ls, sl.mixer), z, rc, **opts)
+                if bt.mutable_state:
+                    _set(new, sl.mixer, ns)
+            elif not bt.mutable_state:      # read-only: window in one call
+                y, _ = bt.decode_step(cfg, _get(bp, sl.mixer),
+                                      _get(ls, sl.mixer), z, rc, **opts)
+            else:
+                y, ns = _window_scan(bt, cfg, _get(bp, sl.mixer),
+                                     _get(ls, sl.mixer), z, rc, opts)
+                _set(new, sl.mixer, ns)
+            h = h + y
+        return h, new
+
+    x, stacked = jax.lax.scan(body, x, (blocks_p, state))
+    out = _copy_tree(state)           # read-only leaves keep their buffers
+    for sl in stack.sublayers:
+        bt = get_block(sl.block)
+        if bt.stateful and bt.mutable_state:
+            _set(out, sl.mixer, _get(stacked, sl.mixer))
+    return x, out
+
+
 # ---------------------------------------------------------------------------
 # model functions (what build_model wires into the Model facade)
 
@@ -325,6 +384,28 @@ def decode_step(plan: ModelPlan, params, cache, tokens, pos, pages=None,
     rc = RunCtx(pos=pos, pages=pages, write_mask=write_mask)
     x, state = _stack_seq(cfg, plan.stack, params, cache[plan.stack.scope],
                           x, rc, "decode")
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {plan.stack.scope: state}
+
+
+def verify_window(plan: ModelPlan, params, cache, tokens, pos, pages=None,
+                  write_mask=None):
+    """Speculative-verify scoring call: tokens (B, W) at per-slot
+    positions ``pos .. pos + W - 1`` -> logits (B, W, V). Paged K/V for
+    the whole window is written through the page table (so the pool
+    afterwards holds the *verifier's* K/V at every window position);
+    recurrent state leaves come back with a leading (W,) axis -- one
+    snapshot per window offset -- for the engine's accept-prefix commit.
+    ``write_mask`` is (B, W): offsets past a slot's live window scatter
+    into the trash page."""
+    cfg = plan.cfg
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    x = L.embed_apply(cfg, params["embed"], tokens, positions=positions)
+    rc = RunCtx(pos=pos, pages=pages, write_mask=write_mask)
+    x, state = _stack_verify(cfg, plan.stack, params,
+                             cache[plan.stack.scope], x, rc)
     x = L.norm_apply(cfg, params["ln_f"], x)
     logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
     return logits, {plan.stack.scope: state}

@@ -72,6 +72,11 @@ class Model:
     # dense layout). Signature: init_paged_cache(bsz, n_pages,
     # page_size, max_len=None); decode_step takes pages=/write_mask=.
     init_paged_cache: Optional[Callable] = None
+    # speculative decoding's exact scoring call over a paged cache:
+    # verify_window(params, cache, toks (B, W), pos (B,), pages=,
+    # write_mask=(B, W)) -> (logits (B, W, V), cache). None whenever
+    # init_paged_cache is None (the verify window reads the page pool).
+    verify_window: Optional[Callable] = None
 
 
 def _no_decode(*_args, **_kwargs):
@@ -279,4 +284,6 @@ def build_model(cfg: ModelConfig) -> Model:
              RT.init_paged_cache(plan, bsz, n_pages, page_size, dtype,
                                  max_len=max_len))
             if RT.plan_pages(plan) else None),
+        verify_window=(partial(RT.verify_window, plan)
+                       if RT.plan_pages(plan) else None),
     )

@@ -49,6 +49,31 @@ which -- together with keeping the sampler's key-split off the
 greedy-only hot path -- is where the pre-paging decode baseline lost
 most of its step budget (table3).
 
+Speculative decoding (``spec_k``, paged mode only): the engine's own
+frozen base weights (``store.materialize(None)`` -- the int8 base when
+quantized) act as the draft model, so speculation adds ZERO extra weight
+bytes. Each round the base drafts up to ``k`` tokens greedily, writing
+its K/V into the slot's already-reserved pages; one batched
+``verify_window`` call then scores all k+1 window positions with the
+target (base+delta) model, *overwriting* the window's K/V with the
+target's own -- so the pool afterwards holds exactly what a sequential
+target decode would have cached and verification is exact. The longest
+draft prefix matching the target's greedy choices is accepted plus the
+target's correction/bonus token; greedy output is bit-identical to the
+non-speculative engine. Rejected positions need no data rollback: reads
+mask ``k_pos <= pos`` and the next round overwrites stale entries before
+they are read. Recurrent leaves (hybrid families) cannot be overwritten
+in place, so verify stacks one state snapshot per window offset and the
+commit selects each slot's accepted offset -- the recurrent analogue of
+the page-table rollback. Sampled slots use speculative rejection
+sampling against the greedy draft (accept token x w.p. p(x); resample
+from the residual on rejection), which preserves the target's top-k
+sampling distribution. The draft's worst-case write position ``pos +
+k`` never outgrows the admission reservation because the per-slot draft
+length is capped at ``remaining``. MoE verify windows share expert
+capacity across window offsets, so spec parity is only pinned for dense
+and hybrid families.
+
 MoE caveat: expert capacity is contended across the whole slot batch, so
 a slot's logits can depend on what its neighbors decode -- inherent to
 capacity-bounded MoE serving, not to this engine.
@@ -92,6 +117,7 @@ class Completion:
     user: Optional[str]
     prompt: np.ndarray
     tokens: np.ndarray            # (n_generated,) int32
+    accept_rate: Optional[float] = None   # draft acceptance (spec mode)
 
 
 @dataclasses.dataclass
@@ -105,14 +131,24 @@ class EngineStats:
     finished: int = 0
     peak_active_slots: int = 0
     peak_pages_in_use: int = 0    # paged mode only (excludes trash page)
+    spec_drafted: int = 0         # draft tokens proposed (spec mode)
+    spec_accepted: int = 0        # draft tokens accepted and committed
+
+    @staticmethod
+    def _rate(num: float, den: float) -> float:
+        return num / den if den > 0 else 0.0
 
     @property
     def prefill_tps(self) -> float:
-        return self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+        return self._rate(self.prefill_tokens, self.prefill_s)
 
     @property
     def decode_tps(self) -> float:
-        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+        return self._rate(self.decode_tokens, self.decode_s)
+
+    @property
+    def spec_accept_rate(self) -> float:
+        return self._rate(self.spec_accepted, self.spec_drafted)
 
 
 def _merge_paged(cache, new, mask):
@@ -200,11 +236,74 @@ def _serving_fns(model) -> Dict[str, Any]:
 
         return jax.tree_util.tree_map_with_path(put, cache)
 
+    def _pool_or(path, old, new):
+        """Leaf-name split shared by the speculative fns: pool leaves
+        (written through the page table) take the new buffer, everything
+        else keeps ``old``."""
+        if str(getattr(path[-1], "key", path[-1])).endswith("_pages"):
+            return new
+        return old
+
+    draft_spec = verify_spec = commit_spec = None
+    verify_window = model.verify_window
+    if verify_window is not None:
+        @partial(jax.jit, static_argnums=(6,), donate_argnums=(1,))
+        def draft_spec(params, cache, last, pos, pages, draft_len, k):
+            """Greedy-draft ``k`` tokens per slot with the (base) params:
+            k chained decode steps inside one dispatch. Slots draft only
+            ``draft_len`` tokens (excess writes land in the trash page and
+            the proposed token freezes). The draft's K/V goes into the
+            shared pages -- verify overwrites it -- while its dense
+            recurrent-state advance is discarded (the target's verify
+            scan re-derives it exactly)."""
+            def step(carry, i):
+                toks, c = carry
+                lg, c = decode_step(params, c, toks[:, None], pos + i,
+                                    pages=pages, write_mask=i < draft_len)
+                nxt = jnp.argmax(lg[:, -1, :], axis=-1).astype(toks.dtype)
+                toks = jnp.where(i < draft_len, nxt, toks)
+                return (toks, c), toks
+
+            (_, newc), drafts = jax.lax.scan(
+                step, (last, cache), jnp.arange(k, dtype=jnp.int32))
+            return drafts, jax.tree_util.tree_map_with_path(
+                _pool_or, cache, newc)
+
+        @jax.jit
+        def verify_spec(params, cache, toks, pos, pages, wmask):
+            """Score the (B, W) window with the target params. NOT
+            donated: the commit's lane-select needs the pre-verify dense
+            leaves for masked-out slots."""
+            return verify_window(params, cache, toks, pos, pages=pages,
+                                 write_mask=wmask)
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def commit_spec(cache, vcache, acc, mask):
+            """Fold a verify result into the cache: pool leaves are
+            already correct for every slot (masked writes went to
+            trash); stacked recurrent leaves (L, W, B, ...) select each
+            slot's accepted window offset ``acc``; read-only leaves
+            (same ndim, never stacked) stay."""
+            def pick(path, o, n):
+                if str(getattr(path[-1], "key",
+                               path[-1])).endswith("_pages"):
+                    return n
+                if n.ndim == o.ndim:
+                    return o
+                sel = n[:, acc, jnp.arange(o.shape[1])]
+                m = jnp.reshape(mask, (1, -1) + (1,) * (o.ndim - 2))
+                return jnp.where(m, sel, o)
+
+            return jax.tree_util.tree_map_with_path(pick, cache, vcache)
+
     fns = {
         "decode_all": decode_all,
         "decode_masked": decode_masked,
         "decode_all_paged": decode_all_paged,
         "decode_masked_paged": decode_masked_paged,
+        "draft_spec": draft_spec,
+        "verify_spec": verify_spec,
+        "commit_spec": commit_spec,
         "install": install,
         "install_paged": install_paged,
         "prefill": (jax.jit(model.prefill, donate_argnums=(1,))
@@ -220,11 +319,18 @@ class ServeEngine:
     def __init__(self, cfg, store: AdapterStore, n_slots: int = 4,
                  max_len: Optional[int] = None, seed: int = 0,
                  paged: bool = False, page_size: int = 16,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 spec_k: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         if self.model.decode_step is None:
             raise ValueError(f"family {cfg.family!r} has no decode path")
+        if spec_k is not None and spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if spec_k is not None and not paged:
+            raise ValueError(
+                "spec_k requires paged=True: the draft writes into (and "
+                "the verifier overwrites) the slot's shared KV pages")
         self.store = store
         self.n_slots = n_slots
         self.max_len = max_len or cfg.max_seq
@@ -234,6 +340,12 @@ class ServeEngine:
         # families without pageable state serve the dense layout even
         # under paged=True (nothing to page; admission is identical)
         self.paged = bool(paged and self.model.init_paged_cache is not None)
+        if spec_k is not None and not self.paged:
+            raise ValueError(
+                f"family {cfg.family!r} has no pageable state; speculative "
+                f"decoding needs a paged KV cache to share between draft "
+                f"and verifier")
+        self.spec_k = int(spec_k or 0)
         self.page_size = page_size
         if self.paged:
             self.slot_pages = -(-self.max_len // page_size)  # per-slot max
@@ -260,6 +372,8 @@ class ServeEngine:
         self._remaining = np.zeros(n_slots, np.int32)
         self._last = np.zeros(n_slots, np.int32)
         self._out: List[List[int]] = [[] for _ in range(n_slots)]
+        self._slot_drafted = np.zeros(n_slots, np.int64)
+        self._slot_accepted = np.zeros(n_slots, np.int64)
         self._finished: List[Completion] = []
         self._fns = _serving_fns(self.model)
 
@@ -364,6 +478,8 @@ class ServeEngine:
             self._remaining[slot] = req.max_new - 1
             self._last[slot] = tok
             self._out[slot] = [tok]
+            self._slot_drafted[slot] = 0
+            self._slot_accepted[slot] = 0
             self.stats.peak_active_slots = max(self.stats.peak_active_slots,
                                                int(self._active.sum()))
             if self._remaining[slot] == 0:
@@ -379,9 +495,12 @@ class ServeEngine:
 
     def _finish(self, slot: int):
         req = self._req[slot]
+        drafted = int(self._slot_drafted[slot])
         self._finished.append(Completion(
             rid=req.rid, user=req.user, prompt=np.asarray(req.prompt),
-            tokens=np.asarray(self._out[slot], np.int32)))
+            tokens=np.asarray(self._out[slot], np.int32),
+            accept_rate=(int(self._slot_accepted[slot]) / drafted
+                         if drafted else None)))
         self._active[slot] = False
         self._req[slot] = None
         if self.paged:
@@ -389,23 +508,115 @@ class ServeEngine:
         self.stats.finished += 1
 
     # ---- decode ---------------------------------------------------------
-    def _live_pages(self, pos: np.ndarray):
-        """Grow page tables to cover this step's write position, then
+    def _live_pages(self, cover: np.ndarray):
+        """Grow page tables to cover this step's highest write position
+        per slot (plain decode: ``pos``; speculative rounds: ``pos +
+        draft_len``, which the admission reservation still covers), then
         return the (n_slots, n_live) table slice spanning every live
         page -- n_live bucketed to powers of two so the decode dispatch
         compiles once per bucket, not once per length."""
         for slot in np.flatnonzero(self._active):
-            while len(self._slot_alloc[slot]) <= pos[slot] // self.page_size:
+            while (len(self._slot_alloc[slot])
+                   <= cover[slot] // self.page_size):
                 self._alloc_page(slot)          # reservation guarantees one
-        maxp = 1 + int(pos[self._active].max()) // self.page_size
+        maxp = 1 + int(cover[self._active].max()) // self.page_size
         n_live = 1
         while n_live < maxp:
             n_live *= 2
         n_live = min(n_live, self.slot_pages)
         return jnp.asarray(self._table[:, :n_live])
 
+    def _spec_step(self):
+        """One speculative round: base drafts up to ``spec_k`` tokens per
+        slot into the shared pages, target verifies the whole window in
+        one batched call, the longest accepted prefix (plus the target's
+        correction/bonus token) is committed. Greedy slots accept by
+        exact argmax prefix match -- output is bit-identical to the
+        plain engine; sampled slots run speculative rejection sampling
+        (:func:`repro.serve.sampling.spec_accept`)."""
+        self._admit()
+        if not self._active.any():
+            return
+        t0 = time.perf_counter()
+        k = self.spec_k
+        act = self._active.copy()
+        d = np.where(act, np.minimum(k, self._remaining), 0).astype(np.int32)
+        pos_np = np.minimum(self._pos, self.max_len - 1)
+        pages = self._live_pages(pos_np + d)
+        drafts, self.cache = self._fns["draft_spec"](
+            self.store.materialize(None), self.cache,
+            jnp.asarray(self._last), jnp.asarray(pos_np), pages,
+            jnp.asarray(d), k)
+        drafts = np.asarray(drafts)                     # (k, n_slots)
+        win = np.concatenate([self._last.reshape(-1, 1), drafts.T],
+                             axis=1).astype(np.int32)   # (n_slots, k+1)
+        win_len = d + 1
+        # snapshot slot->user before any commit can finish (and null) a
+        # slot's request mid-round; masks stay disjoint across users
+        slot_user = {i: self._req[i].user for i in np.flatnonzero(act)}
+        users = set(slot_user.values())
+        if any(not self._req[i].greedy for i in np.flatnonzero(act)):
+            self.key, keys = sampling.step_keys(self.key, self.n_slots)
+            keys = np.asarray(keys)
+        n_committed = 0
+        for u in users:
+            mask = np.array([i in slot_user and slot_user[i] == u
+                             for i in range(self.n_slots)])
+            wmask = mask[:, None] & (np.arange(k + 1)[None, :]
+                                     < win_len[:, None])
+            params = self.store.materialize(u)
+            lg, vstate = self._fns["verify_spec"](
+                params, self.cache, jnp.asarray(win), jnp.asarray(pos_np),
+                pages, jnp.asarray(wmask))
+            lg = np.asarray(lg, np.float32)             # (n_slots, k+1, V)
+            acc = np.zeros(self.n_slots, np.int32)
+            committed: Dict[int, List[int]] = {}
+            for slot in np.flatnonzero(mask):
+                req = self._req[slot]
+                ds = int(d[slot])
+                rem = int(self._remaining[slot])        # >= 1 while active
+                if req.greedy:
+                    tgt = lg[slot, :ds + 1].argmax(axis=1).astype(np.int32)
+                    a = 0
+                    while a < ds and drafts[a, slot] == tgt[a]:
+                        a += 1
+                    toks = tgt[:min(a + 1, rem)].tolist()
+                else:
+                    n_acc, nxt = sampling.spec_accept(
+                        jnp.asarray(keys[slot]),
+                        jnp.asarray(drafts[:ds, slot]),
+                        jnp.asarray(lg[slot, :ds + 1]),
+                        req.topk or self.cfg.vocab, req.temperature)
+                    a = int(n_acc)
+                    toks = (drafts[:a, slot].tolist()
+                            + [int(np.asarray(nxt))])[:min(a + 1, rem)]
+                committed[slot] = toks
+                acc[slot] = len(toks) - 1      # state after consuming
+                #                                window offsets [0, len)
+                self._slot_drafted[slot] += ds
+                self._slot_accepted[slot] += min(a, len(toks))
+                self.stats.spec_drafted += ds
+                self.stats.spec_accepted += min(a, len(toks))
+            self.cache = self._fns["commit_spec"](
+                self.cache, vstate, jnp.asarray(acc), jnp.asarray(mask))
+            for slot, toks in committed.items():
+                self._out[slot].extend(toks)
+                self._last[slot] = toks[-1]
+                self._pos[slot] += len(toks)
+                self._remaining[slot] -= len(toks)
+                n_committed += len(toks)
+                if (self._remaining[slot] == 0
+                        or self._pos[slot] >= self.max_len - 1):
+                    self._finish(slot)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_tokens += n_committed
+        self.stats.decode_steps += 1
+
     def step(self):
-        """Admit whatever fits, then advance every active slot one token."""
+        """Admit whatever fits, then advance every active slot one token
+        (or one speculative window when ``spec_k`` is set)."""
+        if self.spec_k:
+            return self._spec_step()
         self._admit()
         if not self._active.any():
             return

@@ -45,3 +45,41 @@ def sample_topk(keys, logits, k: int, temperature=1.0):
         return ii[jax.random.categorical(kk, vv / t)]
 
     return jax.vmap(one)(keys, vals, idx).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def spec_accept(key, draft, logits, k: int, temperature=1.0):
+    """Speculative rejection sampling against a *greedy* draft.
+
+    draft: (d,) greedily-drafted tokens (d >= 1); logits: (d+1, V) target
+    logits at the d+1 window positions (same top-k/temperature truncation
+    as :func:`sample_topk` defines the target distribution p_i). The
+    draft distribution is the one-hot q_i = delta(draft[i]), so the
+    standard accept rule (accept w.p. min(1, p/q)) reduces to: accept
+    draft[i] with probability p_i(draft[i]); on the first rejection
+    resample from the residual norm(max(p_i - q_i, 0)) -- p_i with the
+    draft token zeroed out; if every draft token is accepted, sample the
+    bonus token from p_d unmodified. Either way the emitted sequence is
+    distributed exactly as d+1 sequential draws from the target.
+
+    Returns (n_accepted, next_token): commit draft[:n_accepted] followed
+    by next_token.
+    """
+    d = draft.shape[0]
+    k = max(1, min(k, logits.shape[-1]))
+    t = jnp.maximum(jnp.float32(temperature), 1e-6)
+    vals, idx = jax.lax.top_k(logits.astype(jnp.float32), k)
+    pk = jax.nn.softmax(vals / t, axis=-1)              # (d+1, k)
+    probs = jax.vmap(lambda ix, pr: jnp.zeros(
+        logits.shape[-1], jnp.float32).at[ix].set(pr))(idx, pk)
+    ukey, skey = jax.random.split(key)
+    p_draft = jnp.take_along_axis(probs[:d], draft[:, None], axis=1)[:, 0]
+    accept = jax.random.uniform(ukey, (d,)) < p_draft
+    n = jnp.sum(jnp.cumprod(accept.astype(jnp.int32)))  # accepted prefix
+    row = probs[jnp.minimum(n, d)]                      # resample source
+    zeroed = row.at[draft[jnp.minimum(n, d - 1)]].set(0.0)
+    resid = jnp.where(n < d, zeroed, row)               # bonus: full p_d
+    resid = jnp.where(resid.sum() > 0, resid, row)      # numeric fallback
+    nxt = jax.random.categorical(
+        skey, jnp.where(resid > 0, jnp.log(resid), -jnp.inf))
+    return n.astype(jnp.int32), nxt.astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""serve/sampling edge cases: the temperature->0 limit collapses to
+greedy, k=1 is argmax regardless of key, seeded draws are reproducible,
+and spec_accept's rejection sampling behaves at its limits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import sampling
+
+
+def _logits(b=4, v=64, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(b, v)).astype(np.float32))
+
+
+def _keys(n, seed=0):
+    _, ks = sampling.step_keys(jax.random.PRNGKey(seed), n)
+    return ks
+
+
+def test_topk_temperature_limit_is_greedy():
+    """As temperature -> 0 the top-k softmax collapses onto the argmax:
+    sample_topk must agree with greedy for every slot and any key."""
+    lg = _logits()
+    want = np.asarray(sampling.greedy(lg))
+    for t in (1e-4, 1e-6, 0.0):           # 0 exercises the clamp
+        got = np.asarray(sampling.sample_topk(_keys(4), lg, 8, t))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_topk_k1_is_argmax():
+    """k=1 renormalizes over a single candidate: the argmax, whatever
+    the key or temperature."""
+    lg = _logits(seed=1)
+    for t in (0.3, 1.0, 2.5):
+        got = np.asarray(sampling.sample_topk(_keys(4, seed=3), lg, 1, t))
+        np.testing.assert_array_equal(got, np.asarray(sampling.greedy(lg)))
+
+
+def test_topk_restricted_to_top_k():
+    """Every sampled token must come from the k largest logits."""
+    lg = _logits(b=8, seed=2)
+    topk = np.argsort(np.asarray(lg), axis=1)[:, -4:]
+    for seed in range(3):
+        got = np.asarray(sampling.sample_topk(_keys(8, seed), lg, 4, 1.5))
+        assert all(got[i] in topk[i] for i in range(8))
+
+
+def test_step_keys_reproducible_and_distinct():
+    k1, s1 = sampling.step_keys(jax.random.PRNGKey(0), 4)
+    k2, s2 = sampling.step_keys(jax.random.PRNGKey(0), 4)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    assert len({tuple(np.asarray(k)) for k in s1}) == 4   # per-slot streams
+    k3, _ = sampling.step_keys(k1, 4)
+    assert tuple(np.asarray(k3)) != tuple(np.asarray(k1))  # key advances
+
+
+# ---------------------------------------------------------------------------
+# spec_accept (speculative rejection sampling against a greedy draft)
+
+
+def test_spec_accept_deterministic():
+    key = jax.random.PRNGKey(0)
+    lg = jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, 32)).astype(np.float32))
+    draft = jnp.asarray(np.array([3, 5, 9], np.int32))
+    a = sampling.spec_accept(key, draft, lg, 8, 1.0)
+    b = sampling.spec_accept(key, draft, lg, 8, 1.0)
+    assert (int(a[0]), int(a[1])) == (int(b[0]), int(b[1]))
+
+
+def test_spec_accept_greedy_limit_full_accept():
+    """temperature -> 0 makes the target one-hot at its argmax; a draft
+    that IS the argmax chain must be fully accepted and the bonus token
+    must be the final position's argmax -- the greedy spec path."""
+    lg = jnp.asarray(np.random.default_rng(1).normal(
+        size=(4, 32)).astype(np.float32))
+    draft = jnp.argmax(lg[:3], axis=1).astype(jnp.int32)
+    for seed in range(5):
+        n, nxt = sampling.spec_accept(jax.random.PRNGKey(seed), draft,
+                                      lg, 8, 1e-9)
+        assert int(n) == 3
+        assert int(nxt) == int(jnp.argmax(lg[3]))
+
+
+def test_spec_accept_greedy_limit_rejects_wrong_draft():
+    """In the same limit a draft token off the argmax is rejected at its
+    position and the resample emits the target argmax (the correction
+    token of greedy speculative decoding)."""
+    lg = jnp.asarray(np.random.default_rng(2).normal(
+        size=(3, 32)).astype(np.float32))
+    am = np.asarray(jnp.argmax(lg, axis=1))
+    draft = jnp.asarray(np.array([am[0], (am[1] + 1) % 32], np.int32))
+    for seed in range(5):
+        n, nxt = sampling.spec_accept(jax.random.PRNGKey(seed), draft,
+                                      lg, 8, 1e-9)
+        assert int(n) == 1                 # position 0 right, 1 wrong
+        assert int(nxt) == am[1]           # correction = target argmax
+
+
+def test_spec_accept_token_in_topk():
+    """Whatever is emitted (accepted, correction, or bonus) must lie in
+    the target's top-k support at its position."""
+    lg = jnp.asarray(np.random.default_rng(3).normal(
+        size=(4, 64)).astype(np.float32))
+    topk = np.argsort(np.asarray(lg), axis=1)[:, -8:]
+    draft = jnp.asarray(np.array([1, 2, 3], np.int32))
+    for seed in range(10):
+        n, nxt = sampling.spec_accept(jax.random.PRNGKey(seed), draft,
+                                      lg, 8, 1.0)
+        n = int(n)
+        assert 0 <= n <= 3
+        assert int(nxt) in topk[n]
+
+
+def test_spec_accept_residual_excludes_rejected_token():
+    """On rejection the residual zeroes the draft token: a rejected
+    token can never be re-emitted at the same position (p - q clamps
+    its mass to zero)."""
+    v = 16
+    lg = np.full((2, v), -10.0, np.float32)
+    lg[0, :4] = [2.0, 1.9, 1.8, 1.7]      # draft token has p < 1
+    lg[1, 0] = 5.0
+    draft = jnp.asarray(np.array([1], np.int32))   # in support, not argmax
+    seen_reject = False
+    for seed in range(40):
+        n, nxt = sampling.spec_accept(jax.random.PRNGKey(seed), draft,
+                                      jnp.asarray(lg), 4, 1.0)
+        if int(n) == 0:                    # rejected at position 0
+            seen_reject = True
+            assert int(nxt) != 1
+    assert seen_reject                     # p(draft) ~ 0.3: must reject
