@@ -122,6 +122,26 @@ def check_table3(bench_dir: str):
     _check("table3/decode_spec_accept_rate",
            ar is not None and 0.0 < ar <= 1.0,
            f"acceptance rate {ar} (must be reported and in (0, 1])")
+    # PR 9 headline: chunked prefill must keep greedy bit-parity with
+    # whole-prompt admission (hard) and cut the admission stall --
+    # slot-seconds decoders sit idle during prefill work -- at least 2x
+    # under the long-prompt-arrival mixed load, TTFT p99 reported.
+    ml = t.get("mixed_load", {})
+    _check("table3/mixed_load_parity",
+           ml.get("greedy_parity") is True,
+           f"chunked greedy tokens == whole-prompt: "
+           f"{ml.get('greedy_parity')}")
+    sr = ml.get("stall_ratio", 0)
+    _check("table3/mixed_load_stall", sr >= 2.0,
+           f"decode stall {ml.get('whole_decode_stall_s')}s whole vs "
+           f"{ml.get('chunked_decode_stall_s')}s chunked = {sr:.1f}x "
+           f"(need >= 2x)")
+    p99 = ml.get("chunked_ttft_p99_ms")
+    _check("table3/mixed_load_ttft",
+           p99 is not None and p99 > 0
+           and ml.get("whole_ttft_p99_ms") is not None,
+           f"ttft p99 whole {ml.get('whole_ttft_p99_ms')}ms / chunked "
+           f"{p99}ms (must be reported)")
 
 
 def check_table4(bench_dir: str):

@@ -42,6 +42,18 @@ def paged_verify_attn(q, k_pages, v_pages, pages, pos):
     return _fv.flash_verify(q, k_pages, v_pages, pages, pos)
 
 
+def paged_prefill_attn(q, k_pages, v_pages, pages, pos):
+    """Chunk attention over a paged KV pool for chunked prefill: q is
+    (B, C, H, hd) -- C prompt tokens per slot, offset c reading
+    positions <= pos + c. Pallas flash-prefill kernel on TPU (whole
+    chunk resident per page sweep), the jnp gather reference elsewhere
+    (same hot-loop rationale as :func:`paged_decode_attn`)."""
+    from repro.kernels import flash_prefill as _fp
+    if _INTERPRET:
+        return _fp.prefill_attn_ref(q, k_pages, v_pages, pages, pos)
+    return _fp.flash_prefill(q, k_pages, v_pages, pages, pos)
+
+
 def zo_add(w, seed, salt: int, coeff, dist: str = "rademacher",
            block=(256, 256), prime_offset: int = 0, prehashed: bool = False,
            scale=None):

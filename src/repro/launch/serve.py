@@ -123,6 +123,15 @@ def main():
                          "the slot's shared KV pages, base+delta verifies "
                          "them in one batched window call; greedy output "
                          "is bit-identical to plain decoding")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    metavar="N",
+                    help="chunked prefill (needs --paged): admissions "
+                         "advance at most N prompt tokens per engine step, "
+                         "written straight into the slot's reserved KV "
+                         "pages, while decoding slots keep stepping -- no "
+                         "whole-prompt admission stall; greedy output is "
+                         "bit-identical to whole-prompt prefill and "
+                         "composes with --spec-k")
     args = ap.parse_args()
 
     if args.family:
@@ -158,7 +167,8 @@ def main():
                          seed=args.seed, paged=args.paged,
                          page_size=args.page_size,
                          pool_pages=args.pool_pages,
-                         spec_k=args.spec_k)
+                         spec_k=args.spec_k,
+                         prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
                            dtype=np.int32)
@@ -182,11 +192,17 @@ def main():
                        f"{st.spec_accepted}/{st.spec_drafted} drafts "
                        f"({st.spec_accept_rate:.0%}) in "
                        f"{st.decode_steps} rounds")
+    if engine.prefill_chunk:
+        paged_note += f" | chunked prefill C={engine.prefill_chunk}"
+    n_done = max(len(completions), 1)
+    lat_note = (f" | ttft avg {st.ttft_s / n_done * 1e3:.0f}ms "
+                f"(queue {st.queue_wait_s / n_done * 1e3:.0f}ms) | "
+                f"decode stall {st.decode_stall_s:.2f} slot-s")
     print(f"[serve] {args.requests} reqs x ({args.prompt_len} prompt + "
           f"{args.gen} gen) in {dt:.2f}s | prefill {st.prefill_tps:.0f} "
           f"tok/s | decode {st.decode_tps:.0f} tok/s | "
           f"adapter materializations: {adapters.stats['misses']} "
-          f"(hits {adapters.stats['hits']})" + paged_note)
+          f"(hits {adapters.stats['hits']})" + lat_note + paged_note)
 
 
 if __name__ == "__main__":

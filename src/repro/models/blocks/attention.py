@@ -19,7 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import paged_decode_attn, paged_verify_attn
+from repro.kernels.ops import (paged_decode_attn, paged_prefill_attn,
+                               paged_verify_attn)
 from repro.models import layers as L
 from repro.models.blocks.base import BlockType, register_block
 
@@ -95,18 +96,15 @@ def _decode_step(cfg, p, state, x, rc, ctx=None, causal=None):
     return L.dense(p["wo"], out.reshape(b, 1, -1)), {"k": ck, "v": cv}
 
 
-def _verify_paged(cfg, p, state, x, rc, ctx=None, causal=None):
-    """Speculative-verify window: score W candidate tokens per slot at
-    positions ``rc.pos .. rc.pos + W - 1`` against the page pool. The
-    verifier's own K/V for the window is scattered into the slot's pages
-    *first* (overwriting whatever the draft wrote there), so the window
-    read -- page gather + causal-in-window masking -- sees exactly the
-    K/V a sequential decode of those tokens would have cached:
-    verification is exact, and speculation costs zero extra KV HBM.
-    ``rc.write_mask`` is (B, W): offsets past a slot's live window (and
-    whole masked-out slots) scatter into the trash page."""
+def _window_paged(cfg, p, state, x, rc, attn, what):
+    """Shared scatter-then-read over the page pool for every multi-token
+    paged entry (speculative verify, chunked prefill): the W tokens' own
+    K/V is written through the page table *first* (masked slots/offsets
+    scatter into the trash page), then the attention read -- page gather
+    plus causal-within-window masking -- sees exactly what a sequential
+    decode of those tokens would have cached."""
     if "k_pages" not in state:
-        raise ValueError("verify window needs a paged KV cache "
+        raise ValueError(f"{what} needs a paged KV cache "
                          "(attention state has no k_pages pool)")
     ck, cv = state["k_pages"], state["v_pages"]     # (NP, ps, KV, hd)
     b, w = x.shape[:2]
@@ -127,9 +125,32 @@ def _verify_paged(cfg, p, state, x, rc, ctx=None, causal=None):
     off = posw % ps
     ck = ck.at[phys, off].set(k.astype(ck.dtype))
     cv = cv.at[phys, off].set(v.astype(cv.dtype))
-    out = paged_verify_attn(q, ck, cv, rc.pages, pos)
+    out = attn(q, ck, cv, rc.pages, pos)
     return (L.dense(p["wo"], out.reshape(b, w, -1)),
             {"k_pages": ck, "v_pages": cv})
+
+
+def _verify_paged(cfg, p, state, x, rc, ctx=None, causal=None):
+    """Speculative-verify window: score W candidate tokens per slot at
+    positions ``rc.pos .. rc.pos + W - 1`` against the page pool. The
+    verifier's own K/V for the window is scattered into the slot's pages
+    first (overwriting whatever the draft wrote there), so verification
+    is exact and speculation costs zero extra KV HBM. ``rc.write_mask``
+    is (B, W): offsets past a slot's live window (and whole masked-out
+    slots) scatter into the trash page."""
+    return _window_paged(cfg, p, state, x, rc, paged_verify_attn,
+                         "verify window")
+
+
+def _prefill_paged(cfg, p, state, x, rc, ctx=None, causal=None):
+    """Chunked prefill: write a C-token prompt chunk's K/V straight into
+    the slot's reserved pages and attend over all prior chunks plus
+    causally within this one -- the flash-prefill kernel sweep. Same
+    scatter-then-read contract as verify; only the read kernel differs
+    (one page sweep per (slot, kv head) with the whole chunk resident,
+    not one per window offset)."""
+    return _window_paged(cfg, p, state, x, rc, paged_prefill_attn,
+                         "chunked prefill")
 
 
 def _prefill(cfg, p, state, x, rc, ctx=None, causal=None):
@@ -152,4 +173,5 @@ def _prefill(cfg, p, state, x, rc, ctx=None, causal=None):
 ATTENTION = register_block(BlockType(
     name="attention", init=L.attn_init, apply=_apply,
     state_spec=_state_spec, prefill=_prefill, decode_step=_decode_step,
-    paged_state_spec=_paged_state_spec, verify=_verify_paged))
+    paged_state_spec=_paged_state_spec, verify=_verify_paged,
+    prefill_paged=_prefill_paged))

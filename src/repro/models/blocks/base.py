@@ -77,6 +77,14 @@ class BlockType:
     # which additionally stacks a (W, ...) axis onto mutable state so
     # the engine can roll back to the last accepted offset.
     verify: Optional[Callable] = None
+    # chunked prefill straight into the page pool: (cfg, p, state,
+    # x(B, C, D), rc, **opts) -> (y, new_state). A C-token prompt chunk
+    # at positions rc.pos..rc.pos+C-1 writes its own K/V through
+    # rc.pages (masked slots/offsets -> trash page) and attends to all
+    # prior cached positions plus causally within the chunk -- no dense
+    # B=1 prompt cache ever exists. Blocks without it (recurrent state)
+    # advance dense state through their ordinary ``prefill`` scan.
+    prefill_paged: Optional[Callable] = None
 
     @property
     def stateful(self) -> bool:

@@ -246,6 +246,50 @@ def _stack_verify(cfg, stack: StackPlan, params, state, x, rc: RunCtx):
     return x, out
 
 
+def _stack_chunk(cfg, stack: StackPlan, params, state, x, rc: RunCtx):
+    """Stateful stack walk over one prompt chunk written straight into
+    the page pool: paged blocks take the whole chunk in one call
+    (``BlockType.prefill_paged`` -- K/V scattered through ``rc.pages``,
+    read via the flash-prefill sweep); recurrent blocks (mamba, rwkv)
+    advance their dense state through their ordinary multi-token
+    ``prefill`` scan -- final state only, no per-offset snapshots, which
+    is what separates this from :func:`_stack_verify` (prefill never
+    rolls back); read-only state (cross-attn K/V) passes through."""
+    blocks_p = params[stack.scope]
+
+    def body(h, xs):
+        bp, ls = xs
+        new = {}
+        for sl in stack.sublayers:
+            bt = get_block(sl.block)
+            z = L.norm_apply(cfg, _get(bp, sl.ln), h)
+            opts = dict(sl.opts)
+            if not bt.stateful:
+                y, _ = bt.apply(cfg, _get(bp, sl.mixer), z, rc, **opts)
+            elif bt.prefill_paged is not None:
+                y, ns = bt.prefill_paged(cfg, _get(bp, sl.mixer),
+                                         _get(ls, sl.mixer), z, rc, **opts)
+                if bt.mutable_state:
+                    _set(new, sl.mixer, ns)
+            elif not bt.mutable_state:      # read-only: chunk in one call
+                y, _ = bt.decode_step(cfg, _get(bp, sl.mixer),
+                                      _get(ls, sl.mixer), z, rc, **opts)
+            else:
+                y, ns = bt.prefill(cfg, _get(bp, sl.mixer),
+                                   _get(ls, sl.mixer), z, rc, **opts)
+                _set(new, sl.mixer, ns)
+            h = h + y
+        return h, new
+
+    x, stacked = jax.lax.scan(body, x, (blocks_p, state))
+    out = _copy_tree(state)           # read-only leaves keep their buffers
+    for sl in stack.sublayers:
+        bt = get_block(sl.block)
+        if bt.stateful and bt.mutable_state:
+            _set(out, sl.mixer, _get(stacked, sl.mixer))
+    return x, out
+
+
 # ---------------------------------------------------------------------------
 # model functions (what build_model wires into the Model facade)
 
@@ -406,6 +450,28 @@ def verify_window(plan: ModelPlan, params, cache, tokens, pos, pages=None,
     rc = RunCtx(pos=pos, pages=pages, write_mask=write_mask)
     x, state = _stack_verify(cfg, plan.stack, params,
                              cache[plan.stack.scope], x, rc)
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, {plan.stack.scope: state}
+
+
+def prefill_chunk(plan: ModelPlan, params, cache, tokens, pos, pages=None,
+                  write_mask=None):
+    """Chunked prefill into a paged cache: tokens (B, C) at per-slot
+    positions ``pos .. pos + C - 1`` -> (logits (B, C, V), cache). Paged
+    K/V for the chunk is written through the page table (the admission
+    reservation guarantees ``pages`` covers ``pos + C - 1``); recurrent
+    state leaves advance in place through each block's prefill scan --
+    no dense B=1 prompt cache, no install scatter. ``write_mask`` is
+    (B,) or (B, C): masked slots/offsets scatter into the trash page."""
+    cfg = plan.cfg
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    x = L.embed_apply(cfg, params["embed"], tokens, positions=positions)
+    rc = RunCtx(pos=pos, positions=positions, pages=pages,
+                write_mask=write_mask)
+    x, state = _stack_chunk(cfg, plan.stack, params,
+                            cache[plan.stack.scope], x, rc)
     x = L.norm_apply(cfg, params["ln_f"], x)
     logits = L.unembed(cfg, params["embed"], params.get("lm_head"), x)
     return logits, {plan.stack.scope: state}

@@ -77,6 +77,12 @@ class Model:
     # write_mask=(B, W)) -> (logits (B, W, V), cache). None whenever
     # init_paged_cache is None (the verify window reads the page pool).
     verify_window: Optional[Callable] = None
+    # chunked prefill straight into the page pool: prefill_chunk(params,
+    # cache, toks (B, C), pos (B,), pages=, write_mask=) -> (logits
+    # (B, C, V), cache) -- attention K/V written through the page table,
+    # recurrent state advanced in place. None whenever init_paged_cache
+    # is None (the chunk writes into the shared pool).
+    prefill_chunk: Optional[Callable] = None
 
 
 def _no_decode(*_args, **_kwargs):
@@ -285,5 +291,7 @@ def build_model(cfg: ModelConfig) -> Model:
                                  max_len=max_len))
             if RT.plan_pages(plan) else None),
         verify_window=(partial(RT.verify_window, plan)
+                       if RT.plan_pages(plan) else None),
+        prefill_chunk=(partial(RT.prefill_chunk, plan)
                        if RT.plan_pages(plan) else None),
     )

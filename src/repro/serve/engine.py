@@ -39,6 +39,28 @@ recurrent leaves: masked lane select) instead of a page-level scatter.
 Families without pageable state (rwkv6: O(1) recurrent state per slot)
 run ``paged=True`` as the dense layout -- same admission, same tokens.
 
+Chunked prefill (``prefill_chunk=C``, paged mode only): whole-prompt
+admission is an *admission stall* -- every resident decode slot freezes
+for the full prompt's prefill, and the prompt transits a throwaway
+dense B=1 cache that is then scattered page-by-page into the pool
+(``install_paged``). Chunked mode instead runs at most one admission at
+a time and advances it at most ``C`` prompt tokens per engine step,
+each chunk written *straight into the slot's reserved pages* by
+``model.prefill_chunk`` (flash-prefill kernel on TPU) -- no dense
+intermediate, no install scatter -- while every decoding slot still
+advances one token per step (Sarathi-style mixed batching). The
+admission reservation already covers every chunk's pages, so chunking
+cannot deadlock. Tail chunks decompose into powers of two (a 13-token
+tail runs as 8+4+1) so the chunk dispatch stays a handful of compiled
+shapes without padding -- padded tokens would corrupt recurrent
+(mamba/rwkv) state, which advances dense through the chunk at the
+slot's lane. While a chunked prefill is in flight, decode always takes
+the masked dispatch: the prefilling slot's page-table row points at
+real pages and its recurrent lane is mid-advance, so an unmasked
+all-slots decode would write garbage through both. Greedy output is
+bit-identical to whole-prompt admission; the per-admission key split
+happens once in both modes.
+
 The engine is family-agnostic: the block-registry runtime's unified
 StateCache puts every dense leaf at (n_layers, B, ...) -- batch on axis
 1 for every family -- so slot scatter/merge is one ``jax.tree.map``,
@@ -109,6 +131,7 @@ class Request:
     topk: int = 0                 # used when greedy=False
     temperature: float = 1.0
     rid: int = -1                 # assigned by submit()
+    submit_ts: Optional[float] = None     # stamped by submit()
 
 
 @dataclasses.dataclass
@@ -118,6 +141,8 @@ class Completion:
     prompt: np.ndarray
     tokens: np.ndarray            # (n_generated,) int32
     accept_rate: Optional[float] = None   # draft acceptance (spec mode)
+    queue_wait_s: float = 0.0     # submit -> admission start
+    ttft_s: float = 0.0           # submit -> first token picked
 
 
 @dataclasses.dataclass
@@ -133,6 +158,14 @@ class EngineStats:
     peak_pages_in_use: int = 0    # paged mode only (excludes trash page)
     spec_drafted: int = 0         # draft tokens proposed (spec mode)
     spec_accepted: int = 0        # draft tokens accepted and committed
+    # slot-seconds active decode slots sat idle while admission prefill
+    # work ran. Whole-prompt admission accrues the full prompt's prefill
+    # per resident decoder in one burst; chunked admission accrues one
+    # chunk at a time, so nearly-finished slots drain instead of
+    # freezing behind a long prompt.
+    decode_stall_s: float = 0.0
+    queue_wait_s: float = 0.0     # summed over admissions
+    ttft_s: float = 0.0           # summed over admissions
 
     @staticmethod
     def _rate(num: float, den: float) -> float:
@@ -205,11 +238,15 @@ def _serving_fns(model) -> Dict[str, Any]:
 
     @partial(jax.jit, donate_argnums=(0,))
     def install(cache, prefill_cache, slot):
-        """Scatter a B=1 prefilled cache into slot row ``slot``."""
+        """Scatter a B=1 prefilled cache into slot row ``slot``. Rows
+        may be shorter than the slot cache along trailing axes (the
+        admission buckets ``fresh_len`` to a power of two): the update
+        writes the row-sized prefix and the dead tail past ``pos`` is
+        never read."""
 
         def put(c, row):
-            return c.at[:, slot].set(
-                jnp.take(row, 0, axis=1).astype(c.dtype))
+            return jax.lax.dynamic_update_slice(
+                c, row.astype(c.dtype), (0, slot) + (0,) * (c.ndim - 2))
 
         return jax.tree.map(put, cache, prefill_cache)
 
@@ -296,6 +333,35 @@ def _serving_fns(model) -> Dict[str, Any]:
 
             return jax.tree_util.tree_map_with_path(pick, cache, vcache)
 
+    prefill_chunk = None
+    chunk_entry = model.prefill_chunk
+    if chunk_entry is not None:
+        @partial(jax.jit, donate_argnums=(1,))
+        def prefill_chunk(params, cache, toks, pos, pages, slot):
+            """Advance slot ``slot`` by one B=1 prompt chunk, written
+            straight into the shared page pool. Pool leaves pass through
+            whole (the chunk scatters via the page table; other slots'
+            pages are untouched); dense (L, B, ...) leaves -- recurrent
+            state for hybrid families -- slice the slot's lane, advance
+            at B=1 through the chunk, and scatter back. ``slot`` is
+            traced, so one compile serves every slot per (C, n_live)
+            bucket."""
+            def take(path, c):
+                if str(getattr(path[-1], "key", path[-1])).endswith("_pages"):
+                    return c
+                return jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
+
+            sub = jax.tree_util.tree_map_with_path(take, cache)
+            logits, new = chunk_entry(params, sub, toks, pos, pages=pages)
+
+            def put(path, c, n):
+                if str(getattr(path[-1], "key", path[-1])).endswith("_pages"):
+                    return n
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), slot, axis=1)
+
+            return logits, jax.tree_util.tree_map_with_path(put, cache, new)
+
     fns = {
         "decode_all": decode_all,
         "decode_masked": decode_masked,
@@ -306,6 +372,7 @@ def _serving_fns(model) -> Dict[str, Any]:
         "commit_spec": commit_spec,
         "install": install,
         "install_paged": install_paged,
+        "prefill_chunk": prefill_chunk,
         "prefill": (jax.jit(model.prefill, donate_argnums=(1,))
                     if model.prefill is not None else None),
         "decode_one": jax.jit(decode_step,   # per-token prefill fallback
@@ -320,7 +387,8 @@ class ServeEngine:
                  max_len: Optional[int] = None, seed: int = 0,
                  paged: bool = False, page_size: int = 16,
                  pool_pages: Optional[int] = None,
-                 spec_k: Optional[int] = None):
+                 spec_k: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         if self.model.decode_step is None:
@@ -331,6 +399,13 @@ class ServeEngine:
             raise ValueError(
                 "spec_k requires paged=True: the draft writes into (and "
                 "the verifier overwrites) the slot's shared KV pages")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if prefill_chunk is not None and not paged:
+            raise ValueError(
+                "prefill_chunk requires paged=True: prompt chunks write "
+                "straight into the slot's reserved KV pages")
         self.store = store
         self.n_slots = n_slots
         self.max_len = max_len or cfg.max_seq
@@ -345,7 +420,13 @@ class ServeEngine:
                 f"family {cfg.family!r} has no pageable state; speculative "
                 f"decoding needs a paged KV cache to share between draft "
                 f"and verifier")
+        if prefill_chunk is not None and not self.paged:
+            raise ValueError(
+                f"family {cfg.family!r} has no pageable state; chunked "
+                f"prefill needs a paged KV cache to write prompt chunks "
+                f"into")
         self.spec_k = int(spec_k or 0)
+        self.prefill_chunk = int(prefill_chunk or 0)
         self.page_size = page_size
         if self.paged:
             self.slot_pages = -(-self.max_len // page_size)  # per-slot max
@@ -374,6 +455,10 @@ class ServeEngine:
         self._out: List[List[int]] = [[] for _ in range(n_slots)]
         self._slot_drafted = np.zeros(n_slots, np.int64)
         self._slot_accepted = np.zeros(n_slots, np.int64)
+        self._queue_wait = np.zeros(n_slots)
+        self._ttft = np.zeros(n_slots)
+        self._prefill_slot: Optional[int] = None   # chunked: slot mid-prefill
+        self._prefill_off = 0                      # prompt tokens done so far
         self._finished: List[Completion] = []
         self._fns = _serving_fns(self.model)
 
@@ -414,6 +499,8 @@ class ServeEngine:
                     f"{self.page_size}); pool holds {self.pool_pages - 1}")
         req.rid = self._next_rid
         self._next_rid += 1
+        if req.submit_ts is None:
+            req.submit_ts = time.perf_counter()
         self.queue.append(req)
         return req.rid
 
@@ -425,7 +512,14 @@ class ServeEngine:
         mode additionally requires the request's worst-case page count
         to fit in the unreserved pool -- admission is the only gate, so
         growth during decode can never fail. FIFO: a head request that
-        does not fit blocks the queue until slots/pages free up."""
+        does not fit blocks the queue until slots/pages free up.
+
+        Whole-prompt admission blocks every resident decode slot for the
+        full prefill (accrued in ``decode_stall_s``); ``prefill_chunk``
+        mode delegates to :meth:`_admit_chunked`, which spreads the
+        prompt over engine steps."""
+        if self.prefill_chunk:
+            return self._admit_chunked()
         for slot in self._free_slots():
             if not self.queue:
                 return
@@ -439,6 +533,8 @@ class ServeEngine:
             params = self.store.materialize(req.user)
             prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
             t0 = time.perf_counter()
+            self._queue_wait[slot] = (
+                t0 - req.submit_ts if req.submit_ts is not None else 0.0)
             if self.paged:
                 self._reserved += need
                 self._slot_reserve[slot] = need
@@ -447,7 +543,12 @@ class ServeEngine:
                     self._alloc_page(slot)
                 fresh_len = n_prompt_pages * self.page_size
             else:
-                fresh_len = self.max_len
+                # bucket the throwaway prefill cache to the next power
+                # of two >= plen instead of a full max_len strip: short
+                # prompts stop paying max_len HBM and the prefill jit
+                # compiles once per bucket (mirroring _live_pages)
+                fresh_len = min(1 << max(plen - 1, 0).bit_length(),
+                                self.max_len)
             fresh = self.model.init_cache(1, fresh_len)
             if self._fns["prefill"] is not None:
                 logits, fresh = self._fns["prefill"](params, fresh,
@@ -465,25 +566,109 @@ class ServeEngine:
             else:
                 self.cache = self._fns["install"](self.cache, fresh, slot)
             jax.block_until_ready(self.cache)
-            self.stats.prefill_s += time.perf_counter() - t0
+            elapsed = time.perf_counter() - t0
+            self.stats.prefill_s += elapsed
+            self.stats.decode_stall_s += elapsed * int(self._active.sum())
             self.stats.prefill_tokens += plen
             self.stats.admitted += 1
+            self._activate(slot, req,
+                           np.asarray(logits[:, -1, :], np.float32)[0], plen)
 
-            self.key, sub = jax.random.split(self.key)
-            tok = self._pick(req, jax.random.fold_in(sub, slot),
-                             np.asarray(logits[:, -1, :], np.float32)[0])
-            self._req[slot] = req
-            self._active[slot] = True
-            self._pos[slot] = plen
-            self._remaining[slot] = req.max_new - 1
-            self._last[slot] = tok
-            self._out[slot] = [tok]
-            self._slot_drafted[slot] = 0
-            self._slot_accepted[slot] = 0
-            self.stats.peak_active_slots = max(self.stats.peak_active_slots,
-                                               int(self._active.sum()))
-            if self._remaining[slot] == 0:
-                self._finish(slot)
+    def _admit_chunked(self):
+        """Chunked admission: at most one prompt in flight, advanced at
+        most ``prefill_chunk`` tokens per engine step straight into the
+        slot's reserved pages -- no dense B=1 cache, no install scatter,
+        and decoding slots keep stepping between chunks. All prompt
+        pages are allocated up front (the reservation covers them), so
+        every chunk's writes land in live pages. The tail decomposes
+        into powers of two (no padding: padded tokens would corrupt the
+        dense recurrent state advancing through the chunk)."""
+        if self._prefill_slot is None:
+            free = self._free_slots()
+            if free and self.queue:
+                req = self.queue[0]
+                plen = int(np.asarray(req.prompt).size)
+                need = self._pages_needed(plen + req.max_new)
+                if self._reserved + need <= self.pool_pages - 1:
+                    self.queue.popleft()
+                    slot = free[0]
+                    now = time.perf_counter()
+                    self._queue_wait[slot] = (
+                        now - req.submit_ts if req.submit_ts is not None
+                        else 0.0)
+                    self._reserved += need
+                    self._slot_reserve[slot] = need
+                    for _ in range(self._pages_needed(plen)):
+                        self._alloc_page(slot)
+                    self._req[slot] = req
+                    self._prefill_slot = slot
+                    self._prefill_off = 0
+                    self.stats.admitted += 1
+        if self._prefill_slot is None:
+            return
+        slot = self._prefill_slot
+        req = self._req[slot]
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = prompt.size
+        params = self.store.materialize(req.user)
+        n_live = 1
+        while n_live < len(self._slot_alloc[slot]):
+            n_live *= 2
+        n_live = min(n_live, self.slot_pages)
+        pages = jnp.asarray(self._table[slot:slot + 1, :n_live])
+        budget = self.prefill_chunk
+        t0 = time.perf_counter()
+        done = 0
+        logits = None
+        while budget > 0 and self._prefill_off < plen:
+            c = min(plen - self._prefill_off, budget)
+            if c < self.prefill_chunk:   # pow2 tail pieces: bounded shapes
+                c = 1 << (c.bit_length() - 1)
+            end = self._prefill_off + c
+            logits, self.cache = self._fns["prefill_chunk"](
+                params, self.cache,
+                jnp.asarray(prompt[None, self._prefill_off:end]),
+                jnp.asarray([self._prefill_off], np.int32), pages,
+                jnp.int32(slot))
+            self._prefill_off = end
+            budget -= c
+            done += c
+        jax.block_until_ready(self.cache)
+        elapsed = time.perf_counter() - t0
+        self.stats.prefill_s += elapsed
+        self.stats.decode_stall_s += elapsed * int(self._active.sum())
+        self.stats.prefill_tokens += done
+        if self._prefill_off < plen:
+            return                       # more chunks next step
+        self._prefill_slot = None
+        self._activate(slot, req,
+                       np.asarray(logits[:, -1, :], np.float32)[0], plen)
+
+    def _activate(self, slot: int, req: Request, logits_row: np.ndarray,
+                  plen: int):
+        """Hand a fully prefilled slot to decode: pick the first token,
+        mark the slot active, record time-to-first-token. One key split
+        per admission in both admission modes keeps greedy (and the
+        per-admission sampling key) bit-identical between them."""
+        self.key, sub = jax.random.split(self.key)
+        tok = self._pick(req, jax.random.fold_in(sub, slot), logits_row)
+        now = time.perf_counter()
+        self._ttft[slot] = (now - req.submit_ts
+                            if req.submit_ts is not None else 0.0)
+        self.stats.queue_wait_s += float(self._queue_wait[slot])
+        self.stats.ttft_s += float(self._ttft[slot])
+        self._req[slot] = req
+        self._active[slot] = True
+        self._pos[slot] = plen
+        self._remaining[slot] = req.max_new - 1
+        self._last[slot] = tok
+        self._out[slot] = [tok]
+        self._slot_drafted[slot] = 0
+        self._slot_accepted[slot] = 0
+        self.stats.peak_active_slots = max(self.stats.peak_active_slots,
+                                           int(self._active.sum()))
+        if self._remaining[slot] == 0:
+            self._finish(slot)
 
     def _pick(self, req: Request, key, logits_row: np.ndarray) -> int:
         if req.greedy:
@@ -500,7 +685,9 @@ class ServeEngine:
             rid=req.rid, user=req.user, prompt=np.asarray(req.prompt),
             tokens=np.asarray(self._out[slot], np.int32),
             accept_rate=(int(self._slot_accepted[slot]) / drafted
-                         if drafted else None)))
+                         if drafted else None),
+            queue_wait_s=float(self._queue_wait[slot]),
+            ttft_s=float(self._ttft[slot])))
         self._active[slot] = False
         self._req[slot] = None
         if self.paged:
@@ -628,7 +815,11 @@ class ServeEngine:
         users = {self._req[i].user for i in range(self.n_slots)
                  if self._active[i]}
         merged = np.zeros((self.n_slots, self.cfg.vocab), np.float32)
-        if len(users) == 1:
+        # while a chunked prefill is in flight its slot must not see
+        # unmasked decode writes: the slot's table row points at real
+        # pages (not trash) and its dense recurrent lane is mid-advance,
+        # so the all-slots fast path would corrupt both
+        if len(users) == 1 and self._prefill_slot is None:
             params = self.store.materialize(next(iter(users)))
             if self.paged:
                 lg, self.cache = self._fns["decode_all_paged"](
@@ -688,7 +879,8 @@ class ServeEngine:
     def run(self) -> List[Completion]:
         """Serve until queue and slots are empty; completions rid-sorted."""
         out: List[Completion] = []
-        while self.queue or self._active.any():
+        while (self.queue or self._active.any()
+               or self._prefill_slot is not None):
             self.step()
             out.extend(self.drain_finished())
         return sorted(out, key=lambda c: c.rid)

@@ -1,0 +1,164 @@
+"""Chunked-prefill kernel: parity against the gather reference and a
+dense attention oracle, across GQA layouts, chunk-start positions that
+straddle page boundaries, and scrambled page tables -- plus the C=1
+degeneration to flash_decode's reference math.
+
+The Pallas kernel runs in interpret mode here (CI is CPU); the serving
+hot path routes through :func:`prefill_attn_ref` off-TPU, so both
+implementations are pinned against the same dense oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import MXU_HEAD_DIMS, paged_attn_ref
+from repro.kernels.flash_prefill import flash_prefill, prefill_attn_ref
+from repro.models.layers import attention
+
+PS = 8  # page size
+
+
+def _prefill_case(seed, b, c, h, kvh, hd, n_live, pos):
+    """Random chunk queries + page pools with a *scrambled* page table:
+    each slot's logical pages map to arbitrary distinct physical pages
+    (page 0 kept as the trash page). The table covers the whole chunk
+    (pos + c - 1), as the admission's up-front prompt-page allocation
+    guarantees."""
+    rng = np.random.default_rng(seed)
+    n_pages = 1 + b * n_live + 3          # trash + slots' pages + spares
+    q = rng.normal(size=(b, c, h, hd)).astype(np.float32)
+    k = rng.normal(size=(n_pages, PS, kvh, hd)).astype(np.float32)
+    v = rng.normal(size=(n_pages, PS, kvh, hd)).astype(np.float32)
+    pos = np.asarray(pos, np.int32)
+    perm = rng.permutation(np.arange(1, n_pages))   # never hand out trash
+    pages = np.zeros((b, n_live), np.int32)
+    for i in range(b):
+        live = 1 + (pos[i] + c - 1) // PS
+        pages[i, :live] = perm[i * n_live:i * n_live + live]
+    return (jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            jnp.asarray(pages), jnp.asarray(pos))
+
+
+def _dense_oracle(q, k_pages, v_pages, pages, pos):
+    """Gather pages to contiguous (B, S, KV, hd) and run plain masked
+    attention with the per-offset causal limit -- the layout-free
+    ground truth."""
+    b, c, h, hd = q.shape
+    kk = np.asarray(k_pages)[np.asarray(pages)].reshape(
+        b, -1, *k_pages.shape[2:])
+    vv = np.asarray(v_pages)[np.asarray(pages)].reshape(
+        b, -1, *v_pages.shape[2:])
+    qpos = np.asarray(pos)[:, None] + np.arange(c)[None, :]
+    valid = np.arange(kk.shape[1])[None, None, :] <= qpos[:, :, None]
+    out = attention(q, jnp.asarray(kk), jnp.asarray(vv),
+                    causal=False, kv_mask=jnp.asarray(valid), chunk=0)
+    return np.asarray(out)
+
+
+# chunk starts that straddle page boundaries from every side: a fresh
+# prompt (pos 0, the first chunk), a chunk starting on the last row of a
+# page, on a fresh page, and mid-page -- and C > PS below makes single
+# chunks span multiple pages outright
+RAGGED_POS = (PS - 2, PS, 2 * PS + 3, 0)
+
+
+@pytest.mark.parametrize("kvh,g", [(1, 4), (2, 2), (4, 1)])
+def test_kernel_matches_dense_oracle_gqa(kvh, g):
+    q, k, v, pages, pos = _prefill_case(0, b=4, c=4, h=kvh * g, kvh=kvh,
+                                        hd=16, n_live=4, pos=RAGGED_POS)
+    want = _dense_oracle(q, k, v, pages, pos)
+    got_ref = np.asarray(prefill_attn_ref(q, k, v, pages, pos))
+    got_kern = np.asarray(flash_prefill(q, k, v, pages, pos, interpret=True))
+    np.testing.assert_allclose(got_ref, want, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(got_kern, want, rtol=2e-4, atol=2e-5)
+
+
+def test_chunk_wider_than_page():
+    """C > page_size: one chunk's rows span several pages, so a single
+    page sweep step serves rows before, inside, and after its span."""
+    q, k, v, pages, pos = _prefill_case(6, b=3, c=2 * PS + 3, h=4, kvh=2,
+                                        hd=16, n_live=6, pos=(0, PS - 1, 5))
+    want = _dense_oracle(q, k, v, pages, pos)
+    got = np.asarray(flash_prefill(q, k, v, pages, pos, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+    ref = np.asarray(prefill_attn_ref(q, k, v, pages, pos))
+    np.testing.assert_allclose(ref, want, rtol=2e-4, atol=2e-5)
+
+
+def test_causal_inside_chunk():
+    """Chunk offset c must see positions [0, pos + c] and nothing later:
+    poisoning the K/V at chunk offset j must change offsets >= j only."""
+    c = 4
+    q, k, v, pages, pos = _prefill_case(1, b=2, c=c, h=2, kvh=1, hd=16,
+                                        n_live=3, pos=(3, PS - 1))
+    base = np.asarray(flash_prefill(q, k, v, pages, pos, interpret=True))
+    j = 2                                 # poison chunk offset j's K/V
+    pg = np.asarray(pages)
+    pp = np.asarray(pos)
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    for b_ in range(2):
+        p_ = pp[b_] + j
+        k2[pg[b_, p_ // PS], p_ % PS] = 1e3
+        v2[pg[b_, p_ // PS], p_ % PS] = 1e3
+    got = np.asarray(flash_prefill(q, jnp.asarray(k2), jnp.asarray(v2),
+                                   pages, pos, interpret=True))
+    np.testing.assert_allclose(got[:, :j], base[:, :j], rtol=1e-6)
+    assert not np.allclose(got[:, j:], base[:, j:])
+    ref = np.asarray(prefill_attn_ref(q, jnp.asarray(k2), jnp.asarray(v2),
+                                      pages, pos))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_kernel_ignores_trash_page_contents():
+    """Dead table entries point at physical page 0; whatever is in it
+    must not leak into any slot's chunk."""
+    q, k, v, pages, pos = _prefill_case(2, b=3, c=3, h=4, kvh=2, hd=16,
+                                        n_live=4, pos=(3, PS, 2 * PS - 2))
+    poisoned_k = k.at[0].set(1e4)
+    poisoned_v = v.at[0].set(1e4)
+    a = np.asarray(flash_prefill(q, k, v, pages, pos, interpret=True))
+    bb = np.asarray(flash_prefill(q, poisoned_k, poisoned_v, pages, pos,
+                                  interpret=True))
+    np.testing.assert_allclose(a, bb, rtol=1e-6)
+    r = np.asarray(prefill_attn_ref(q, poisoned_k, poisoned_v, pages, pos))
+    np.testing.assert_allclose(a, r, rtol=2e-4, atol=2e-5)
+
+
+def test_c1_degenerates_to_flash_decode_reference():
+    """A one-token chunk is exactly paged decode attention: the ref
+    must match paged_attn_ref bitwise on the same inputs."""
+    q, k, v, pages, pos = _prefill_case(3, b=3, c=1, h=4, kvh=2, hd=16,
+                                        n_live=4, pos=(PS - 1, PS, 5))
+    ours = np.asarray(prefill_attn_ref(q, k, v, pages, pos))
+    theirs = np.asarray(paged_attn_ref(q[:, 0], k, v, pages, pos))
+    np.testing.assert_array_equal(ours[:, 0], theirs)
+    kern = np.asarray(flash_prefill(q, k, v, pages, pos, interpret=True))
+    np.testing.assert_allclose(kern[:, 0], theirs, rtol=2e-4, atol=2e-5)
+
+
+def test_single_live_page():
+    """n_live == 1: the init / accumulate / finalize grid steps coincide
+    and the whole chunk lives in one page."""
+    q, k, v, pages, pos = _prefill_case(4, b=2, c=3, h=2, kvh=1, hd=16,
+                                        n_live=1, pos=(0, 2))
+    want = _dense_oracle(q, k, v, pages, pos)
+    got = np.asarray(flash_prefill(q, k, v, pages, pos, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_head_dim_validation():
+    """Off-MXU head dims must be a loud ValueError when compiling for
+    real hardware (interpret mode lifts it for CI correctness runs)."""
+    q, k, v, pages, pos = _prefill_case(5, b=2, c=2, h=2, kvh=1, hd=16,
+                                        n_live=2, pos=(1, 2))
+    with pytest.raises(ValueError, match="MXU"):
+        flash_prefill(q, k, v, pages, pos, interpret=False)
+    for hd in MXU_HEAD_DIMS:  # aligned dims pass validation (trace only)
+        jax.eval_shape(
+            lambda qq, kk, vv: flash_prefill(qq, kk, vv, pages, pos,
+                                             interpret=True),
+            jax.ShapeDtypeStruct((2, 2, 2, hd), jnp.float32),
+            jax.ShapeDtypeStruct(k.shape[:3] + (hd,), jnp.float32),
+            jax.ShapeDtypeStruct(v.shape[:3] + (hd,), jnp.float32))

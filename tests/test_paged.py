@@ -6,6 +6,7 @@ Set REPRO_FAMILY=<family[,family]> to restrict the engine parity matrix
 (the CI family matrix does).
 """
 
+import dataclasses
 import os
 
 import jax
@@ -187,3 +188,96 @@ def test_oversized_request_rejected_at_submit():
                       pool_pages=5)
     with pytest.raises(ValueError, match="pages"):
         eng.submit(Request(prompt=np.zeros(6, np.int32), max_new=12))
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: whole-prompt admission vs prefill_chunk=C, bit for bit
+
+
+def _run_chunked(cfg, store, plens, G, prefill_chunk=None, users=None,
+                 n_slots=2, page_size=4):
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(10 + i),
+                                             (p,), 0, cfg.vocab), np.int32)
+               for i, p in enumerate(plens)]
+    eng = ServeEngine(cfg, store, n_slots=n_slots, max_len=max(plens) + G,
+                      seed=0, paged=True, page_size=page_size,
+                      prefill_chunk=prefill_chunk)
+    if prefill_chunk:
+        # no dense B=1 prompt cache may exist on the chunked admission
+        # path: chunks write straight into the pool, install never runs
+        def _boom(*a, **kw):
+            raise AssertionError("dense prefill path used in chunked mode")
+        eng.model = dataclasses.replace(eng.model, init_cache=_boom)
+        eng._fns = {**eng._fns, "prefill": _boom, "install": _boom,
+                    "install_paged": _boom}
+    rids = [eng.submit(Request(prompt=pr, max_new=G,
+                               user=users[i] if users else None))
+            for i, pr in enumerate(prompts)]
+    outs = {c.rid: c.tokens.tolist() for c in eng.run()}
+    return [outs[r] for r in rids], eng
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "rwkv6-7b"])
+@pytest.mark.parametrize("chunk", [1, 3, 4, 64])
+def test_engine_chunked_prefill_matches_whole_prompt(arch, chunk):
+    """Greedy tokens must be bit-identical whether a prompt is admitted
+    in one whole-prompt prefill or spread over C-token chunks written
+    straight into the pool -- chunk sizes below, at, and above the page
+    size, tails decomposing into pow2 pieces (plen 9 @ C=4 -> 4+4+1),
+    and C=64 > every prompt (one chunk, still the paged path)."""
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        # chunked admission re-times the decode batches, and MoE expert
+        # capacity is contended across whatever shares a dispatch --
+        # ample capacity keeps routing deterministic so parity is about
+        # the chunk path, not capacity drops (cf. test_serve.py)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build_model(cfg)
+    store = AdapterStore(model.init(jax.random.PRNGKey(0)))
+    plens, G = (5, 9, 7, 12), 6
+    a, _ = _run_chunked(cfg, store, plens, G)
+    b, eng = _run_chunked(cfg, store, plens, G, prefill_chunk=chunk)
+    assert a == b
+    assert eng.stats.prefill_tokens == sum(plens)
+    assert eng._prefill_slot is None
+    assert len(eng._free_pages) == eng.pool_pages - 1    # all pages freed
+    assert eng._reserved == 0
+
+
+def test_engine_chunked_prefill_multi_adapter():
+    """Chunked admission under mixed base / alice / bob slots: the
+    in-flight prefill slot must survive masked multi-adapter decode
+    dispatches between its chunks (trash-page writes for the masked
+    lane), staying bit-identical to whole-prompt admission."""
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    store = AdapterStore(model.init(jax.random.PRNGKey(0)))
+    store.put("alice", _records(4, seed=1))
+    store.put("bob", _records(4, seed=2))
+    users = [None, "alice", "bob", "alice"]
+    plens, G = (5, 9, 7, 12), 6
+    a, _ = _run_chunked(cfg, store, plens, G, users=users)
+    b, _ = _run_chunked(cfg, store, plens, G, prefill_chunk=3, users=users)
+    assert a == b
+
+
+def test_chunked_prefill_flag_validation():
+    cfg = get_config("gemma-2b").reduced()
+    store = AdapterStore(build_model(cfg).init(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="prefill_chunk must be >= 1"):
+        ServeEngine(cfg, store, n_slots=2, max_len=16, paged=True,
+                    prefill_chunk=0)
+    with pytest.raises(ValueError, match="requires paged"):
+        ServeEngine(cfg, store, n_slots=2, max_len=16, paged=False,
+                    prefill_chunk=4)
+
+
+def test_chunked_prefill_rejected_without_pageable_state():
+    """rwkv6 degrades paged=True to the dense layout -- there are no
+    pages for chunks to write into, so prefill_chunk must be a loud
+    constructor error, not a silent whole-prompt fallback."""
+    cfg = get_config("rwkv6-7b").reduced()
+    store = AdapterStore(build_model(cfg).init(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="no pageable state"):
+        ServeEngine(cfg, store, n_slots=2, max_len=16, paged=True,
+                    prefill_chunk=4)

@@ -200,3 +200,29 @@ def test_plain_engine_reports_no_accept_rate():
     assert eng.stats.spec_drafted == 0
     assert eng.stats.spec_accept_rate == 0.0
     assert all(c.accept_rate is None for c in comps)
+
+
+# ---------------------------------------------------------------------------
+# composition with chunked prefill
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_composes_with_chunked_prefill(arch):
+    """spec_k + prefill_chunk together: chunked admission must coexist
+    with speculative rounds (the in-flight prefill slot's lane is masked
+    out of draft writes, verify, and commit), staying bit-identical to
+    the plain paged engine."""
+    cfg = get_config(arch).reduced()
+    store = AdapterStore(build_model(cfg).init(jax.random.PRNGKey(0)))
+    store.put("u", _records(4, seed=1))
+    users = ["u", None, "u", None]
+    plens, G = (5, 9, 7, 12), 6
+    a, _, _ = _run(cfg, store, plens, G, users=users)
+    eng = ServeEngine(cfg, store, n_slots=2, max_len=max(plens) + G,
+                      seed=0, paged=True, page_size=4, spec_k=3,
+                      prefill_chunk=3)
+    rids = [eng.submit(Request(prompt=pr, max_new=G, user=users[i]))
+            for i, pr in enumerate(_prompts(cfg, plens))]
+    comps = {c.rid: c for c in eng.run()}
+    assert [comps[r].tokens.tolist() for r in rids] == a
+    assert eng.stats.spec_drafted > 0
