@@ -19,12 +19,13 @@ def main() -> None:
 
     from benchmarks import (fig1_loss, roofline, table1_memory,
                             table2_walltime, table3_serving,
-                            table4_multitenant)
+                            table4_multitenant, table5_fleet)
     mods = {
         "table1": table1_memory,
         "table2": table2_walltime,
         "table3": table3_serving,
         "table4": table4_multitenant,
+        "table5": table5_fleet,
         "fig1": fig1_loss,
         "roofline": roofline,
     }

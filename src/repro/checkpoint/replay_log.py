@@ -54,14 +54,20 @@ class ReplayLog:
                 f.write(b"\n")
 
     def append(self, step: int, seed, gs, lr: float, eps: float,
-               mask=None):
+               mask=None, staleness=None):
         """``mask``: the step's straggler direction_mask, recorded so
-        replay renormalizes over the same survivors the live update did."""
+        replay renormalizes over the same survivors the live update did.
+        ``staleness``: for async (fleet) runs, the number of updates
+        applied between the worker's params snapshot and this apply --
+        replay scales the update by ``staleness_decay ** staleness``
+        exactly as the live coordinator did."""
         rec = {"step": int(step), "seed": int(np.asarray(seed)),
                "gs": np.asarray(gs, np.float32).reshape(-1).tolist(),
                "lr": float(lr), "eps": float(eps)}
         if mask is not None:
             rec["mask"] = np.asarray(mask, np.float32).reshape(-1).tolist()
+        if staleness is not None:
+            rec["staleness"] = int(staleness)
         self._f.write(json.dumps(rec) + "\n")
         if self.fsync:
             self._f.flush()
@@ -100,17 +106,43 @@ class ReplayLog:
                 f"ReplayLog.read({path}): dropped {dropped} corrupt "
                 f"line(s) (torn append); kept {len(out)} valid record(s)",
                 RuntimeWarning, stacklevel=2)
-        # de-duplicate on step (a retried step may be appended twice)
-        seen, dedup = set(), []
+        # de-duplicate on step (a retried step may be appended twice).
+        # A benign retry repeats the record verbatim; async delivery can
+        # also produce a *divergent* retry -- same step, different
+        # seed/gs (e.g. a re-issued lease evaluated at a newer params
+        # version). First-applied wins either way, but a divergent
+        # duplicate is surfaced: it means two writers raced the log.
+        kept, dedup, conflicts = {}, [], set()
         for r in out:
-            if r["step"] not in seen:
-                seen.add(r["step"])
+            prev = kept.get(r["step"])
+            if prev is None:
+                kept[r["step"]] = r
                 dedup.append(r)
+            elif (prev.get("seed") != r.get("seed")
+                  or prev.get("gs") != r.get("gs")):
+                conflicts.add(r["step"])
+        if conflicts:
+            shown = sorted(conflicts)
+            warnings.warn(
+                f"ReplayLog.read({path}): {len(conflicts)} conflicting "
+                f"duplicate step(s) {shown[:8]}"
+                f"{'...' if len(shown) > 8 else ''} carry different "
+                f"seed/gs (divergent retry); kept the first-applied "
+                f"record per step", RuntimeWarning, stacklevel=2)
         return dedup
 
 
 def replay_into(params, records: List[dict], cfg) -> Tuple[object, int]:
-    """Apply logged updates in order. Returns (params, last_step)."""
+    """Apply logged updates in order. Returns (params, last_step).
+
+    File order IS application order: async (fleet) logs carry step ids
+    out of order -- the step field keys dedup/resume, never reordering.
+    A record bearing ``staleness`` replays through the ``stale-sgd``
+    update rule (decay ``cfg.staleness_decay ** staleness`` folded into
+    the direction coefficients); the fleet coordinator applies its live
+    updates through this very function, so live-vs-replay is
+    bit-identical by construction.
+    """
     import dataclasses
 
     from repro.core.mezo import replay_update
@@ -118,9 +150,17 @@ def replay_into(params, records: List[dict], cfg) -> Tuple[object, int]:
     for rec in records:
         c = dataclasses.replace(cfg, lr=rec["lr"], eps=rec["eps"])
         mask = rec.get("mask")
-        params = replay_update(params, np.uint32(rec["seed"]),
-                               np.asarray(rec["gs"], np.float32), c,
-                               direction_mask=(None if mask is None else
-                                               np.asarray(mask, np.float32)))
+        mask = None if mask is None else np.asarray(mask, np.float32)
+        stale = rec.get("staleness")
+        if stale is None:
+            params = replay_update(params, np.uint32(rec["seed"]),
+                                   np.asarray(rec["gs"], np.float32), c,
+                                   direction_mask=mask)
+        else:
+            from repro.core.engine import STALE_SGD
+            params, _ = STALE_SGD.update_fn(
+                params, {}, np.uint32(rec["seed"]),
+                np.asarray(rec["gs"], np.float32), mask, c,
+                staleness=stale)
         last = rec["step"]
     return params, last

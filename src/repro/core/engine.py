@@ -81,6 +81,7 @@ class MezoConfig:
     momentum: float = 0.0          # ZO momentum via truncated seed replay
     momentum_window: int = 8       # directions of history to replay
     weight_decay: float = 0.0
+    staleness_decay: float = 0.8   # async fleet: update scale decay^stale
 
 
 @dataclasses.dataclass
@@ -149,6 +150,26 @@ def _direction_coeffs(kk: int, lr, direction_mask):
         return jnp.full((kk,), -lr * jnp.float32(1.0 / kk), jnp.float32)
     m = jnp.asarray(direction_mask, jnp.float32).reshape(kk)
     return -lr * m / jnp.maximum(m.sum(), 1.0)
+
+
+def _staleness_coeffs(kk: int, lr, direction_mask, staleness, decay):
+    """Per-direction coefficients for an *asynchronously delivered*
+    direction set: the synchronous coefficients scaled by
+    ``decay ** staleness``, where ``staleness`` counts the updates
+    applied between the worker's params snapshot and this apply.
+
+    ZO tolerates this where SGD cannot -- a stale ``gs`` is still an
+    unbiased directional sample at a nearby point, so down-weighting
+    (rather than discarding) keeps slow workers contributing. The decay
+    is one extra f32 multiply on top of :func:`_direction_coeffs`
+    (``x * 1.0`` is exact for staleness 0, so a fresh result is
+    bit-identical to the synchronous path), and both the live fleet
+    coordinator and log replay compute it from the same logged integer
+    -- which is what keeps async runs bit-replayable.
+    """
+    base = _direction_coeffs(kk, lr, direction_mask)
+    scale = jnp.float32(decay) ** jnp.asarray(staleness, jnp.float32)
+    return base * scale
 
 
 def _apply_direction_updates(params, seed, gs, coeffs, cfg: MezoConfig):
@@ -316,6 +337,27 @@ def _sgd_update(params, opt, seed, gs, direction_mask, cfg: MezoConfig,
     gs = jnp.asarray(gs, jnp.float32).reshape(-1)
     lr = _f32(lr, cfg.lr)
     coeffs = _direction_coeffs(gs.shape[0], lr, direction_mask)
+    if cfg.weight_decay:
+        params = _decay(params, lr * cfg.weight_decay)
+    return _apply_direction_updates(params, seed, gs, coeffs, cfg), opt
+
+
+def _stale_sgd_update(params, opt, seed, gs, direction_mask,
+                      cfg: MezoConfig, lr=None, staleness=None):
+    """sgd with staleness decay: the async fleet's update rule.
+
+    ``staleness=None``/``0`` degenerates to :func:`_sgd_update`
+    bit-exactly (the decay multiply is by exactly 1.0), so the
+    checkpoint manager can replay a stale-sgd log tail through the
+    standard ``update_fn(params, opt, seed, gs, mask, cfg)`` call and a
+    mixed log (sync steps + async steps) stays coherent.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    gs = jnp.asarray(gs, jnp.float32).reshape(-1)
+    lr = _f32(lr, cfg.lr)
+    coeffs = _staleness_coeffs(gs.shape[0], lr, direction_mask,
+                               0 if staleness is None else staleness,
+                               cfg.staleness_decay)
     if cfg.weight_decay:
         params = _decay(params, lr * cfg.weight_decay)
     return _apply_direction_updates(params, seed, gs, coeffs, cfg), opt
@@ -617,6 +659,8 @@ FUSED = register_estimator(DirectionEvaluator(
 
 SGD = register_update_rule(UpdateRule(
     name="sgd", init_fn=_sgd_init, update_fn=_sgd_update))
+STALE_SGD = register_update_rule(UpdateRule(
+    name="stale-sgd", init_fn=_sgd_init, update_fn=_stale_sgd_update))
 MOMENTUM = register_update_rule(UpdateRule(
     name="momentum", init_fn=momentum_history_init,
     update_fn=_momentum_update))

@@ -23,6 +23,7 @@ class DataPipeline:
         self._sharding = sharding
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
+        self._dead: Optional[str] = None   # why __next__ can't proceed
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -33,31 +34,60 @@ class DataPipeline:
             lambda x, s: jax.device_put(np.asarray(x), s), batch,
             self._sharding)
 
+    def _put(self, item) -> bool:
+        """Stop-aware put: a plain blocking ``put`` on a full queue
+        deadlocks shutdown (the consumer is gone, nothing ever drains),
+        so block in short slices and re-check the stop flag between
+        them. Returns False when stopped without enqueueing."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _worker(self):
         try:
             for batch in self._source:
                 if self._stop.is_set():
                     return
-                self._q.put(self._place(batch))
+                if not self._put(self._place(batch)):
+                    return
         except Exception as e:  # surface errors on the consumer side
-            self._q.put(e)
-        self._q.put(StopIteration())
+            self._put(e)
+            return
+        self._put(StopIteration())
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._dead == "exhausted":
+            raise StopIteration            # iterator protocol: stay done
+        if self._dead is not None:
+            # after a worker error or close() the queue never refills --
+            # a bare q.get() would hang forever
+            raise RuntimeError(f"DataPipeline is closed ({self._dead})")
         item = self._q.get()
         if isinstance(item, StopIteration):
+            self._dead = "exhausted"
             raise item
         if isinstance(item, Exception):
+            self._dead = f"worker raised {type(item).__name__}"
             raise item
         return item
 
     def close(self):
+        """Idempotent shutdown: stop the worker (a stop-aware put never
+        wedges on a full queue), drain whatever it enqueued, and join so
+        no producer thread outlives the pipeline."""
         self._stop.set()
+        if self._dead is None:
+            self._dead = "close() called"
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout=5.0)

@@ -1,6 +1,11 @@
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.runtime.stragglers import StragglerPolicy
-from repro.runtime.elastic import elastic_mesh, remesh_params
+from repro.runtime.elastic import elastic_mesh, mesh_shape_for, remesh_params
+from repro.runtime.fleet import (DirectionLease, FaultSpec, FleetCoordinator,
+                                 FleetReport, FleetSim, WorkerSpec,
+                                 get_grade, lease_latency_s)
 
 __all__ = ["Trainer", "TrainerConfig", "StragglerPolicy", "elastic_mesh",
-           "remesh_params"]
+           "mesh_shape_for", "remesh_params", "FleetCoordinator", "FleetSim",
+           "FleetReport", "DirectionLease", "WorkerSpec", "FaultSpec",
+           "get_grade", "lease_latency_s"]

@@ -15,7 +15,8 @@ a same-(data,model)-topology change this is pod-broadcast only).
 
 from __future__ import annotations
 
-from typing import Any
+import warnings
+from typing import Any, Tuple
 
 import jax
 import numpy as np
@@ -26,6 +27,36 @@ from repro.models import sharding as shd
 PyTree = Any
 
 
+def mesh_shape_for(n: int, model_parallel: int, data_parallel: int
+                   ) -> Tuple[int, int, int]:
+    """(pods, data, model) mesh shape for ``n`` live devices.
+
+    Keeps the intra-pod (data, model) topology fixed when at least one
+    full pod's devices remain, absorbing count changes into the pod
+    axis; otherwise degrades to one partial pod (model axis kept, data
+    axis shrunk). Devices that don't fill the shape are *stranded* --
+    excluded from the mesh, silently contributing nothing -- so any
+    remainder is warned about by name rather than dropped quietly.
+    """
+    per_pod = model_parallel * data_parallel
+    if n >= per_pod:
+        shape = (n // per_pod, data_parallel, model_parallel)
+    else:
+        dp = max(1, n // model_parallel)
+        if dp * model_parallel > n:
+            model_parallel, dp = n, 1
+        shape = (1, dp, model_parallel)
+    used = int(np.prod(shape))
+    if used < n:
+        warnings.warn(
+            f"elastic_mesh: stranding {n - used} of {n} devices (mesh "
+            f"shape {shape} uses {used}; pod size "
+            f"{per_pod} = {data_parallel} data x {model_parallel} "
+            f"model) -- they will sit idle until the next resize",
+            RuntimeWarning, stacklevel=3)
+    return shape
+
+
 def elastic_mesh(devices=None, model_parallel: int = 16,
                  data_parallel: int = 16):
     """Mesh for however many devices are currently alive.
@@ -33,22 +64,12 @@ def elastic_mesh(devices=None, model_parallel: int = 16,
     Keeps the intra-pod (data, model) topology fixed (so param shardings
     stay valid) and absorbs device-count changes into the pod axis.
     Falls back to shrinking data_parallel when fewer than one pod's
-    devices remain (degraded single-pod mode).
+    devices remain (degraded single-pod mode). Devices beyond the last
+    full pod are stranded with a warning (``mesh_shape_for``).
     """
     devices = np.asarray(devices if devices is not None else jax.devices())
-    per_pod = model_parallel * data_parallel
-    n = devices.size
-    if n >= per_pod:
-        pods = n // per_pod
-        devs = devices[: pods * per_pod].reshape(pods, data_parallel,
-                                                 model_parallel)
-        return Mesh(devs, ("pod", "data", "model"))
-    # degraded: one partial pod -- keep model axis, shrink data axis
-    dp = max(1, n // model_parallel)
-    if dp * model_parallel > n:
-        model_parallel = n
-        dp = 1
-    devs = devices[: dp * model_parallel].reshape(1, dp, model_parallel)
+    shape = mesh_shape_for(devices.size, model_parallel, data_parallel)
+    devs = devices[: int(np.prod(shape))].reshape(shape)
     return Mesh(devs, ("pod", "data", "model"))
 
 

@@ -40,12 +40,42 @@ class StragglerPolicy:
     def total(self) -> int:
         return self.n_directions + self.redundancy
 
+    @property
+    def seen(self) -> bool:
+        """True once at least one latency vector has been observed."""
+        return self._seen
+
+    @property
+    def ema_latencies(self) -> np.ndarray:
+        """Copy of the (total,) EMA latency estimates (zeros before the
+        first observation). Feeding an entry's own EMA back through
+        :meth:`observe` leaves it unchanged, so a caller tracking items
+        that report latencies one at a time (the fleet coordinator's
+        workers) can update a single entry per observation."""
+        return self._lat.copy()
+
     def observe(self, latencies: Sequence[float]):
         lat = np.asarray(latencies, np.float64)
-        assert lat.shape == (self.total,)
+        if lat.shape != (self.total,):
+            raise ValueError(
+                f"StragglerPolicy.observe: latencies shape {lat.shape} "
+                f"!= expected ({self.total},) (n_directions="
+                f"{self.n_directions} + redundancy={self.redundancy})")
         self._lat = lat if not self._seen else (
             self.ema * self._lat + (1 - self.ema) * lat)
         self._seen = True
+
+    def deadline(self) -> float:
+        """Per-item latency budget: ``deadline_factor`` x the median of
+        the EMA latencies -- the same cutoff :meth:`mask` drops slow
+        observations with, exposed as an absolute duration so an async
+        coordinator can expire (and re-issue) a direction lease instead
+        of merely masking it. ``inf`` until the first observation: with
+        no latency model yet, nothing can be declared late."""
+        if not self._seen:
+            return float("inf")
+        return float(self.deadline_factor
+                     * max(np.median(self._lat), 1e-9))
 
     def mask(self, slow: Optional[Sequence[int]] = None) -> np.ndarray:
         """(K+R,) 0/1 mask of accepted directions.

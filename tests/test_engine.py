@@ -54,7 +54,7 @@ def quad():
 
 def test_registry_names_and_errors():
     assert set(estimator_names()) == {"walk", "vmapdir", "fused"}
-    assert set(update_rule_names()) == {"sgd", "momentum"}
+    assert set(update_rule_names()) == {"sgd", "stale-sgd", "momentum"}
     for name in strategy_names():
         # cached singletons: jit caches keyed on the strategy stay warm
         assert get_strategy(name) is get_strategy(name)
